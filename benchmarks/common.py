@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every table prints ``name,us_per_call,derived`` rows (derived column holds
+the table-specific metric: speedup, bytes, iterations/s, ...).
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, repeats=5):
+    """Median wall time of a blocking call, in microseconds."""
+    for _ in range(warmup):
+        _block(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _block(out):
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def problem(scale="bench"):
+    from repro.data.dmri import synth_connectome
+    if scale == "bench":
+        return synth_connectome(n_fibers=1024, n_theta=96, n_atoms=96,
+                                grid=(20, 20, 20), algorithm="PROB", seed=5)
+    return synth_connectome(n_fibers=128, n_theta=32, n_atoms=32,
+                            grid=(10, 10, 10), seed=5)

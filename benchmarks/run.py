@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run [table ...]
+"""
+import sys
+import time
+
+from benchmarks import (table2_restructuring, table3_partitioning,
+                        table4_opt_combos, table5_scaling,
+                        table8_kernel_ladder, table9_param_sweep,
+                        table10_end2end)
+
+TABLES = {
+    "table2": table2_restructuring,
+    "table3": table3_partitioning,
+    "table4": table4_opt_combos,
+    "table5": table5_scaling,
+    "table8": table8_kernel_ladder,   # covers paper tables 6-8
+    "table9": table9_param_sweep,
+    "table10": table10_end2end,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        TABLES[name].run()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

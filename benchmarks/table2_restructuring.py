@@ -1,0 +1,34 @@
+"""Paper Table 2: naive-executor SpMV under each data-restructuring choice.
+
+The paper measures CPU-naive DSC/WC with atom- vs voxel-sorted Phi; here the
+naive executor is the scatter/gather formulation and restructuring changes
+the access locality the same way (XLA's scatter is sensitive to sortedness).
+Derived column: speedup over the unsorted baseline.
+"""
+import numpy as np
+
+from benchmarks.common import emit, problem, time_fn
+from repro.core import spmv
+from repro.core.restructure import sort_by_host
+
+import jax.numpy as jnp
+
+
+def run():
+    p = problem()
+    w = jnp.ones((p.phi.n_fibers,), jnp.float32)
+    y = p.b
+    base_dsc = time_fn(spmv.dsc_naive, p.phi, p.dictionary, w)
+    base_wc = time_fn(spmv.wc_naive, p.phi, p.dictionary, y)
+    emit("table2.dsc.unsorted", base_dsc, "1.00x")
+    emit("table2.wc.unsorted", base_wc, "1.00x")
+    for dim in ("atom", "voxel", "fiber"):
+        phi_s, _ = sort_by_host(p.phi, dim)
+        t_dsc = time_fn(spmv.dsc_naive, phi_s, p.dictionary, w)
+        t_wc = time_fn(spmv.wc_naive, phi_s, p.dictionary, y)
+        emit(f"table2.dsc.{dim}-sorted", t_dsc, f"{base_dsc / t_dsc:.2f}x")
+        emit(f"table2.wc.{dim}-sorted", t_wc, f"{base_wc / t_wc:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Table 3: computation-partitioning x restructuring combinations on
+the parallel-naive executor.
+
+The paper's thread-partitioning choices map to distinct XLA lowerings:
+
+  coeff+<sort>   scatter-add over coefficients (atomics analogue)
+  voxel+voxel    sorted-segment reduction keyed by the output dim (the
+                 sync-free mapping: one sub-vector -> one reducer)
+  fiber+fiber    same for WC
+
+Derived: speedup over the worst combo for the same op.
+"""
+import jax.numpy as jnp
+
+from benchmarks.common import emit, problem, time_fn
+from repro.core import spmv
+from repro.core.restructure import sort_by_host
+
+
+def run():
+    p = problem()
+    w = jnp.ones((p.phi.n_fibers,), jnp.float32)
+    y = p.b
+    phi_v, _ = sort_by_host(p.phi, "voxel")
+    phi_a, _ = sort_by_host(p.phi, "atom")
+    phi_f, _ = sort_by_host(p.phi, "fiber")
+
+    dsc = {
+        "coeff+voxel": lambda: spmv.dsc_atom_sorted(phi_v, p.dictionary, w),
+        "coeff+atom": lambda: spmv.dsc_atom_sorted(phi_a, p.dictionary, w),
+        "voxel+voxel": lambda: spmv.dsc(phi_v, p.dictionary, w),
+    }
+    wc = {
+        "coeff+voxel": lambda: spmv.wc_atom_sorted(phi_v, p.dictionary, y),
+        "coeff+atom": lambda: spmv.wc_atom_sorted(phi_a, p.dictionary, y),
+        "fiber+fiber": lambda: spmv.wc(phi_f, p.dictionary, y),
+    }
+    for op, combos in (("dsc", dsc), ("wc", wc)):
+        times = {name: time_fn(fn) for name, fn in combos.items()}
+        worst = max(times.values())
+        for name, t in times.items():
+            emit(f"table3.{op}.{name}", t, f"{worst / t:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

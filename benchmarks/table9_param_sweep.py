@@ -1,0 +1,29 @@
+"""Paper Table 9: execution time vs LiFE parameters (fibers, tractography).
+
+Sweeps fiber count and tractography algorithm on the optimized executor;
+derived column: Phi nnz (the paper's "Phi size" column analogue) and the
+per-iteration SBBNNLS time.
+"""
+from benchmarks.common import emit, time_fn
+from repro.core.life import LifeConfig, LifeEngine
+from repro.data.dmri import TRACTOGRAPHY, synth_connectome
+
+
+def run():
+    for algo in sorted(TRACTOGRAPHY):
+        p = synth_connectome(n_fibers=512, n_theta=96, n_atoms=96,
+                             grid=(16, 16, 16), algorithm=algo, seed=6)
+        eng = LifeEngine(p, LifeConfig(executor="opt", n_iters=1))
+        us = time_fn(lambda: eng.run(n_iters=2), warmup=1, repeats=2) / 2
+        emit(f"table9.algo.{algo}", us, f"nnz={p.phi.n_coeffs}")
+
+    for nf in (256, 512, 1024, 2048):
+        p = synth_connectome(n_fibers=nf, n_theta=96, n_atoms=96,
+                             grid=(16, 16, 16), algorithm="PROB", seed=7)
+        eng = LifeEngine(p, LifeConfig(executor="opt", n_iters=1))
+        us = time_fn(lambda: eng.run(n_iters=2), warmup=1, repeats=2) / 2
+        emit(f"table9.fibers.{nf}", us, f"nnz={p.phi.n_coeffs}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Distributed LiFE: the paper's workload on a 2-D device mesh.
+
+    PYTHONPATH=src python examples/distributed_life.py
+
+Runs the 2-D (voxel x fiber) shard_map partition of SBBNNLS on 8 placeholder
+host devices — the same code path the 512-chip dry-run lowers — and checks it
+against the single-device engine.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.life import LifeConfig, LifeEngine
+from repro.data.dmri import synth_connectome
+from repro.distributed import life_shard as LS
+
+
+def main():
+    problem = synth_connectome(n_fibers=512, n_theta=96, n_atoms=96,
+                               grid=(16, 16, 16), algorithm="PROB", seed=0)
+    R, C = 4, 2
+    mesh = jax.make_mesh((R, C), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} devices")
+
+    t0 = time.time()
+    shards = LS.build_life_shards(problem.phi, 96, R=R, C=C)
+    print(f"inspector: 2-D partition in {time.time()-t0:.2f}s — "
+          f"{R}x{C} cells, <= {shards.dsc_values.shape[-1]} nnz/cell "
+          f"(equal-nnz, sub-vector-snapped)")
+
+    step = LS.make_sharded_step(mesh, dict(nv_local=shards.nv_local,
+                                           nf_local=shards.nf_local,
+                                           n_theta=96))
+    args = LS.sharded_state(mesh, shards, problem)
+    jstep = jax.jit(step)
+
+    w = args["w"]
+    with mesh:
+        for it in range(50):
+            w, loss = jstep(args["da"], args["dv"], args["df"], args["dw"],
+                            args["wa"], args["wv"], args["wf"], args["ww"],
+                            args["d"], args["b"], w,
+                            jnp.asarray(it, jnp.int32))
+            if it % 10 == 0:
+                print(f"  iter {it:3d} loss {float(loss):.4f}")
+    w_full = LS.unshard_w(shards, np.asarray(w))
+
+    eng = LifeEngine(problem, LifeConfig(executor="opt", n_iters=50))
+    w_ref, losses = eng.run()
+    err = np.abs(w_full - np.asarray(w_ref)).max()
+    print(f"distributed vs single-device max |dw|: {err:.2e}")
+    assert err < 1e-2
+    print("OK — 2-D mesh partition reproduces the single-device solution")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: prune a synthetic connectome with LiFE in ~30 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the whole paper pipeline: synthetic dMRI/tractography -> STD encoding
+(Phi tensor + dictionary) -> runtime-autotuned restructuring -> SBBNNLS with
+weight compaction -> pruned connectome vs ground truth.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.life import LifeConfig, LifeEngine
+from repro.data.dmri import synth_connectome
+
+
+def main():
+    print("1. synthesizing connectome (PROB tractography, 512 fibers)...")
+    problem = synth_connectome(n_fibers=512, n_theta=96, n_atoms=96,
+                               grid=(16, 16, 16), algorithm="PROB", seed=0)
+    print(f"   Phi: {problem.phi.n_coeffs} coefficients, "
+          f"{problem.stats['phi_mbytes']:.1f} MB, "
+          f"{problem.stats['nnz_per_fiber']:.1f} nnz/fiber")
+
+    print("2. building engine (runtime-autotuned restructuring)...")
+    eng = LifeEngine(problem, LifeConfig(executor="auto", n_iters=100,
+                                         compact_every=25))
+    print(f"   DSC plan: {eng.dsc_plan.describe()}")
+    print(f"   WC  plan: {eng.wc_plan.describe()}")
+
+    print("3. running SBBNNLS...")
+    w, losses = eng.run()
+    print(f"   loss {losses[0]:.3f} -> {losses[-1]:.5f} "
+          f"({len(losses)} iterations)")
+    print(f"   inspector overhead: {eng.inspector_seconds:.2f}s "
+          f"(amortized across iterations, paper §4.1.2)")
+
+    stats = eng.prune_stats(w)
+    print(f"4. pruned connectome: kept {int(stats['kept'])}/"
+          f"{int(stats['total'])} fibers | precision "
+          f"{stats['precision']:.2f} recall {stats['recall']:.2f}")
+    w_np = np.asarray(w)
+    print(f"   w sparsity: {(w_np == 0).mean():.1%} zeros "
+          f"(drives the compaction win)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Checkpoint manager: atomic save, restore, reshard-on-load, retention.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a `.tmp`
+sibling and atomically renamed (crash mid-save never corrupts the latest
+checkpoint).  Restore returns host numpy trees; `place()` re-device_puts them
+under *any* mesh/sharding — that is the elastic-restart path: a job restarted
+on a different device count reshards transparently (DESIGN.md §5).
+
+At real scale this module's role is played by per-host array shards
+(tensorstore/OCDBT); the manifest/atomic-rename/reshard logic is the part
+that carries over and is what the fault-tolerance tests exercise.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+SEP = "/"
+
+# numpy .npz cannot serialize ml_dtypes types; store bit-views + a dtype map
+_EXTENDED_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flatten(tree: Any) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if str(arr.dtype) in _EXTENDED_DTYPES:
+            arr = arr.view(_EXTENDED_DTYPES[str(arr.dtype)][1])
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         meta: Optional[Dict[str, Any]] = None, keep: int = 3) -> str:
+    """Atomic checkpoint write; prunes to the most recent `keep` steps."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, dtypes = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {"step": step, "n_arrays": len(flat),
+                "bytes": int(sum(a.nbytes for a in flat.values())),
+                "dtypes": dtypes,
+                **(meta or {})}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None
+            ) -> Tuple[int, Dict[str, np.ndarray], Dict[str, Any]]:
+    """Returns (step, flat arrays keyed by path, manifest)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    for key, dt in manifest.get("dtypes", {}).items():
+        if dt in _EXTENDED_DTYPES and key in flat:
+            flat[key] = flat[key].view(_EXTENDED_DTYPES[dt][0])
+    return step, flat, manifest
+
+
+def unflatten_like(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    """Rebuild a pytree shaped like `template` from restored arrays."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def place(tree: Any, shardings: Any) -> Any:
+    """device_put a host tree under (possibly different-mesh) shardings —
+    the reshard-on-load / elastic-restart path."""
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)

@@ -1,0 +1,10 @@
+"""life-stn96 — the paper's own application: LiFE/SBBNNLS over an STN96-like
+connectome (Ntheta=96).  Not an LM; `supports()` is irrelevant — the LiFE
+dry-run lowers the SBBNNLS iteration over the 2-D (voxel x fiber) mesh
+partition instead of train/serve steps (launch/dryrun.py special-cases it)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="life-stn96", family="life",
+    n_layers=0, d_model=96,          # d_model doubles as Ntheta
+))

@@ -1,0 +1,129 @@
+"""Data restructuring & runtime autotuning (paper §4.1.2, §4.2).
+
+The paper's central target-independent optimization: sort the Phi tensor by
+one of its indirection dimensions so indirect accesses become contiguous
+*sub-vectors* (runs of equal index).  The winning dimension is chosen at
+runtime by measuring each candidate a few times, and the (host-side,
+inspector) cost is amortized across the several hundred SBBNNLS iterations —
+and across runs, via plan caching.
+
+TPU adaptation: we sort by the *output* dimension of each op (voxel for DSC,
+fiber for WC) so the scatter becomes a segment reduction; the paper's CPU/GPU
+choice (voxel for DSC, atom for WC) is kept available for comparison.  See
+DESIGN.md §2.
+
+Weight compaction (paper §4.2.1.3 "the BLAS call is evaded when the scalar is
+zero"): SBBNNLS projects w to the nonnegative orthant so w gets sparser every
+iteration; `compact_by_weight` drops coefficients whose fiber weight is zero
+— an inspector re-run amortized over the following iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.std import PhiTensor
+
+SORT_DIMS = ("atom", "voxel", "fiber")
+
+
+def sort_by(phi: PhiTensor, dim: str) -> Tuple[PhiTensor, jax.Array]:
+    """Stable sort of the coefficients along one indirection dimension.
+
+    Returns (restructured phi, permutation) — the permutation is kept so
+    plans can be cached/replayed (amortization across runs).
+    """
+    key = {"atom": phi.atoms, "voxel": phi.voxels, "fiber": phi.fibers}[dim]
+    order = jnp.argsort(key, stable=True)
+    return phi.take(order), order
+
+
+def sort_by_host(phi: PhiTensor, dim: str) -> Tuple[PhiTensor, np.ndarray]:
+    """Host (numpy) variant used by inspectors — no device round-trips."""
+    key = {"atom": phi.atoms, "voxel": phi.voxels, "fiber": phi.fibers}[dim]
+    order = np.argsort(np.asarray(key), kind="stable")
+    return phi.take(jnp.asarray(order)), order
+
+
+def segment_starts(sorted_ids: np.ndarray) -> np.ndarray:
+    """Start offsets of each sub-vector (run of equal ids) in a sorted vector."""
+    if sorted_ids.size == 0:
+        return np.zeros(0, np.int64)
+    change = np.nonzero(np.diff(sorted_ids))[0] + 1
+    return np.concatenate([[0], change])
+
+
+def compact_by_weight(phi: PhiTensor, w, threshold: float = 0.0) -> PhiTensor:
+    """Drop coefficients whose fiber weight is (near-)zero.
+
+    Host-side inspector; returns a smaller PhiTensor.  Matches the paper's
+    skip-zero-daxpy optimization but at the data-structure level, which is the
+    TPU-friendly formulation (no per-element branches on device).
+    """
+    w = np.asarray(w)
+    keep = np.nonzero(w[np.asarray(phi.fibers)] > threshold)[0]
+    return phi.take(jnp.asarray(keep, jnp.int32))
+
+
+@dataclasses.dataclass
+class SpmvPlan:
+    """Declarative restructuring + partitioning choice for one SpMV op.
+
+    This is the framework's analogue of the paper's PolyMage-DSL layer: the
+    user states the op; the autotuner fills in `restructure` (sort dimension)
+    and `partition` (coefficient/voxel/atom split), and the executor honours
+    it.  Cached in-process so repeated runs skip the measurement.
+    """
+
+    op: str                      # "dsc" | "wc"
+    restructure: str             # member of SORT_DIMS
+    partition: str               # "coeff" | "voxel" | "atom" | "fiber"
+    order: Optional[np.ndarray] = None   # cached permutation
+
+    def describe(self) -> str:
+        return f"{self.op}: sort-by-{self.restructure}, {self.partition}-partition"
+
+
+_PLAN_CACHE: Dict[Tuple, SpmvPlan] = {}
+
+
+def autotune_plan(
+    op: str,
+    phi: PhiTensor,
+    run: Callable[[PhiTensor, str], jax.Array],
+    candidates: Tuple[str, ...] = ("atom", "voxel", "fiber"),
+    repeats: int = 3,
+    cache_key: Optional[Tuple] = None,
+) -> SpmvPlan:
+    """Measure each restructuring candidate `repeats` times, pick the best.
+
+    Mirrors the paper's runtime selection ("average execution time for three
+    runs").  ``run(sorted_phi, dim)`` executes the op for a tensor sorted
+    along ``dim`` and blocks until ready.
+    """
+    if cache_key is not None and (cache_key := ("plan", op) + cache_key) in _PLAN_CACHE:
+        return _PLAN_CACHE[cache_key]
+    best: Tuple[float, str, np.ndarray] | None = None
+    for dim in candidates:
+        sorted_phi, order = sort_by_host(phi, dim)
+        run(sorted_phi, dim).block_until_ready()  # compile/warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            run(sorted_phi, dim).block_until_ready()
+        dt = (time.perf_counter() - t0) / repeats
+        if best is None or dt < best[0]:
+            best = (dt, dim, order)
+    assert best is not None
+    # Output-side sorts admit segment (sync-free) partitioning; input-side
+    # sorts fall back to coefficient partitioning (paper Table 3/4 combos).
+    out_dim = "voxel" if op == "dsc" else "fiber"
+    partition = out_dim if best[1] == out_dim else "coeff"
+    plan = SpmvPlan(op=op, restructure=best[1], partition=partition, order=best[2])
+    if cache_key is not None:
+        _PLAN_CACHE[cache_key] = plan
+    return plan

@@ -1,0 +1,127 @@
+"""Sparse Tucker Decomposition (STD) encoding of the LiFE matrix M.
+
+The ENCODE representation (Caiafa & Pestilli 2017) stores the connectome
+matrix ``M in R^{Ntheta*Nv x Nf}`` as:
+
+  * a dictionary ``D in R^{Na x Ntheta}`` of canonical diffusion atoms, and
+  * a sparse third-order tensor ``Phi`` with ``Nc`` nonzero coefficients,
+    each a triple of indirection indices ``(atom_k, voxel_k, fiber_k)`` plus
+    a value ``val_k``.
+
+With that encoding the two SpMV hot ops of SBBNNLS become (Figure 3 of the
+paper):
+
+  DSC  (y = M w):    Y[voxel_k, :] += D[atom_k, :] * w[fiber_k] * val_k
+  WC   (w = M^T y):  w[fiber_k]    += val_k * <D[atom_k, :], Y[voxel_k, :]>
+
+This module holds the PhiTensor container plus dense materialization used as
+the test oracle.  All indices are int32 (the paper's "strength reduction for
+arrays": the original MATLAB code shipped them as float64).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PhiTensor:
+    """COO sparse Tucker core of the LiFE matrix.
+
+    atoms, voxels, fibers: int32[Nc] indirection vectors.
+    values: float[Nc] coefficient values.
+    n_atoms / n_voxels / n_fibers: static dimension sizes.
+    """
+
+    atoms: Array
+    voxels: Array
+    fibers: Array
+    values: Array
+    n_atoms: int = dataclasses.field(metadata=dict(static=True))
+    n_voxels: int = dataclasses.field(metadata=dict(static=True))
+    n_fibers: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_coeffs(self) -> int:
+        return self.values.shape[0]
+
+    def astype(self, dtype) -> "PhiTensor":
+        return dataclasses.replace(self, values=self.values.astype(dtype))
+
+    def take(self, order: Array) -> "PhiTensor":
+        """Reorder coefficients (the paper's data restructuring primitive)."""
+        return dataclasses.replace(
+            self,
+            atoms=jnp.take(self.atoms, order),
+            voxels=jnp.take(self.voxels, order),
+            fibers=jnp.take(self.fibers, order),
+            values=jnp.take(self.values, order),
+        )
+
+    def validate(self) -> None:
+        a, v, f = map(np.asarray, (self.atoms, self.voxels, self.fibers))
+        if a.size and (a.min() < 0 or a.max() >= self.n_atoms):
+            raise ValueError("atom index out of range")
+        if v.size and (v.min() < 0 or v.max() >= self.n_voxels):
+            raise ValueError("voxel index out of range")
+        if f.size and (f.min() < 0 or f.max() >= self.n_fibers):
+            raise ValueError("fiber index out of range")
+
+
+def materialize_dense(phi: PhiTensor, dictionary: Array) -> Array:
+    """Dense M in R^{(Nv*Ntheta) x Nf}; oracle only — O(Nv*Ntheta*Nf) memory.
+
+    M[v*Ntheta + t, f] = sum over coefficients k with (voxel_k=v, fiber_k=f)
+                         of D[atom_k, t] * val_k
+    """
+    n_theta = dictionary.shape[1]
+    m = jnp.zeros((phi.n_voxels * n_theta, phi.n_fibers), dictionary.dtype)
+    rows = phi.voxels[:, None] * n_theta + jnp.arange(n_theta)[None, :]
+    cols = jnp.broadcast_to(phi.fibers[:, None], rows.shape)
+    vals = dictionary[phi.atoms] * phi.values[:, None]
+    return m.at[rows.reshape(-1), cols.reshape(-1)].add(vals.reshape(-1))
+
+
+def demean_signal(y: Array, n_theta: int) -> Array:
+    """Per-voxel demeaning of the measured diffusion signal (LiFE convention)."""
+    y2 = y.reshape(-1, n_theta)
+    return (y2 - y2.mean(axis=1, keepdims=True)).reshape(-1)
+
+
+def make_dictionary(n_atoms: int, n_theta: int, *, key: Optional[Array] = None,
+                    dtype=jnp.float32) -> Array:
+    """Synthetic canonical-atom dictionary.
+
+    Atoms model stick-like diffusion responses along quasi-uniform 3-D
+    orientations, evaluated against Ntheta gradient directions — demeaned per
+    atom, matching the ENCODE dictionary construction closely enough for
+    performance work.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    atom_dirs = _fibonacci_sphere(n_atoms)
+    grad_dirs = np.array(jax.random.normal(k1, (n_theta, 3)))
+    grad_dirs /= np.linalg.norm(grad_dirs, axis=1, keepdims=True)
+    # Stick model: S(theta) = exp(-b * d * (g . n)^2)
+    cos2 = (grad_dirs @ atom_dirs.T) ** 2  # (Ntheta, Na)
+    sig = np.exp(-2.0 * cos2).T  # (Na, Ntheta)
+    sig = sig - sig.mean(axis=1, keepdims=True)
+    return jnp.asarray(sig, dtype)
+
+
+def _fibonacci_sphere(n: int) -> np.ndarray:
+    i = np.arange(n, dtype=np.float64) + 0.5
+    phi = np.arccos(1 - 2 * i / n)
+    theta = np.pi * (1 + 5 ** 0.5) * i
+    return np.stack(
+        [np.cos(theta) * np.sin(phi), np.sin(theta) * np.sin(phi), np.cos(phi)],
+        axis=1,
+    )

@@ -1,0 +1,134 @@
+"""Synthetic dMRI / tractography generator (DS1/DS2 analogue).
+
+The paper evaluates on the STN96 dataset (Ntheta=96, Nv ~ 1.4-2.6e5,
+Nf = 5e4-5e5) with candidate connectomes from five MRtrix tractography
+algorithms (Table 9).  That data is not redistributable, so this module
+synthesizes connectomes with matching structure:
+
+  * fibers are 3-D streamlines stepped through a voxel grid,
+  * each traversed (voxel, orientation) pair quantizes the step direction to
+    the nearest dictionary atom (the ENCODE construction),
+  * Phi coefficients are (atom, voxel, fiber, value=segment length), deduped,
+  * the measured signal is  y = M w_true + noise  with a sparse nonnegative
+    ground-truth w_true (so pruning has signal to find).
+
+The five named generators vary step curvature/length statistics the way the
+MRtrix algorithms vary tract shapes; they exist so the Table-9 benchmark has
+a faithful sweep axis, not to claim anatomical realism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.std import PhiTensor, make_dictionary, _fibonacci_sphere
+from repro.core import spmv
+
+TRACTOGRAPHY = {
+    # name: (curvature, mean_len, len_jitter)
+    "DET": (0.05, 24, 4),
+    "PROB": (0.35, 24, 8),
+    "iFOD1": (0.50, 36, 12),
+    "SD_STREAM": (0.20, 20, 6),
+    "FACT": (0.00, 16, 4),
+}
+
+
+@dataclasses.dataclass
+class LifeProblem:
+    phi: PhiTensor
+    dictionary: jax.Array        # (Na, Ntheta)
+    b: jax.Array                 # (Nv, Ntheta) demeaned measured signal
+    w_true: jax.Array            # (Nf,) ground truth weights
+    stats: Dict[str, float]
+
+
+def synth_connectome(
+    *,
+    n_fibers: int = 512,
+    n_theta: int = 96,
+    n_atoms: int = 96,
+    grid: Tuple[int, int, int] = (24, 24, 24),
+    algorithm: str = "PROB",
+    noise: float = 0.01,
+    active_frac: float = 0.35,
+    seed: int = 0,
+    dtype=jnp.float32,
+) -> LifeProblem:
+    if algorithm not in TRACTOGRAPHY:
+        raise ValueError(f"unknown tractography {algorithm!r}")
+    curvature, mean_len, jitter = TRACTOGRAPHY[algorithm]
+    rng = np.random.default_rng(seed)
+    gx, gy, gz = grid
+    n_voxels = gx * gy * gz
+    atom_dirs = _fibonacci_sphere(n_atoms)
+
+    atoms, voxels, fibers, values = [], [], [], []
+    step = 0.75
+    for f in range(n_fibers):
+        pos = rng.uniform([2, 2, 2], [gx - 2, gy - 2, gz - 2])
+        d = rng.normal(size=3)
+        d /= np.linalg.norm(d)
+        n_steps = max(4, int(rng.normal(mean_len, jitter)))
+        for _ in range(n_steps):
+            if curvature > 0:
+                d = d + curvature * rng.normal(size=3)
+                d /= np.linalg.norm(d)
+            elif algorithm == "FACT":
+                # axis-aligned steps (fiber assignment by continuous tracking)
+                ax = np.argmax(np.abs(d))
+                d = np.zeros(3)
+                d[ax] = 1.0
+            pos = pos + step * d
+            v = np.floor(pos).astype(np.int64)
+            if np.any(v < 0) or v[0] >= gx or v[1] >= gy or v[2] >= gz:
+                break
+            vox = int(v[0] * gy * gz + v[1] * gz + v[2])
+            atom = int(np.argmax(np.abs(atom_dirs @ d)))  # axial symmetry
+            atoms.append(atom)
+            voxels.append(vox)
+            fibers.append(f)
+            values.append(step)
+
+    atoms_a = np.asarray(atoms, np.int64)
+    voxels_a = np.asarray(voxels, np.int64)
+    fibers_a = np.asarray(fibers, np.int64)
+    values_a = np.asarray(values, np.float64)
+
+    # dedupe repeated (atom, voxel, fiber) triples, summing values
+    key = (atoms_a * n_voxels + voxels_a) * n_fibers + fibers_a
+    uniq, inv = np.unique(key, return_inverse=True)
+    val_sum = np.zeros(uniq.size, np.float64)
+    np.add.at(val_sum, inv, values_a)
+    atoms_u = (uniq // n_fibers) // n_voxels
+    voxels_u = (uniq // n_fibers) % n_voxels
+    fibers_u = uniq % n_fibers
+
+    phi = PhiTensor(
+        atoms=jnp.asarray(atoms_u, jnp.int32),
+        voxels=jnp.asarray(voxels_u, jnp.int32),
+        fibers=jnp.asarray(fibers_u, jnp.int32),
+        values=jnp.asarray(val_sum, dtype),
+        n_atoms=n_atoms, n_voxels=n_voxels, n_fibers=n_fibers,
+    )
+    dictionary = make_dictionary(n_atoms, n_theta, dtype=dtype)
+
+    w_true = rng.uniform(0.0, 1.0, n_fibers)
+    w_true[rng.uniform(size=n_fibers) > active_frac] = 0.0
+    w_true_j = jnp.asarray(w_true, dtype)
+    clean = spmv.dsc_naive(phi, dictionary, w_true_j)
+    b = clean + noise * jnp.asarray(rng.normal(size=clean.shape), dtype)
+
+    nc = phi.n_coeffs
+    stats = dict(
+        n_coeffs=float(nc),
+        n_voxels_touched=float(np.unique(voxels_u).size),
+        phi_mbytes=float(nc * (3 * 4 + 4)) / 1e6,
+        nnz_per_fiber=float(nc) / max(1, n_fibers),
+    )
+    return LifeProblem(phi=phi, dictionary=dictionary, b=b,
+                       w_true=w_true_j, stats=stats)

@@ -1,0 +1,350 @@
+"""Distributed LiFE: 2-D (voxel x fiber) mesh partition of SBBNNLS.
+
+The paper's computation partitioning (§4.1.3) lifted from threads to the
+device mesh (its MPI-LiFE comparison point, §7.1.3, rebuilt jax-native):
+
+  * voxel ranges shard over the batch axes (`pod`,`data`) — R row groups,
+  * fiber ranges shard over `model`                        — C col groups,
+  * each device owns the Phi coefficients in its (voxel-range x fiber-range)
+    cell, TWICE (voxel-sorted for DSC, fiber-sorted for WC — the per-op
+    restructuring), with *localized* indices,
+  * DSC: local sorted-segment-sum -> psum over `model`  (fiber reduction),
+  * WC : local sorted-segment-sum -> psum over rows     (voxel reduction),
+  * SBBNNLS dot products: local vdot + psum over the axis the operand is
+    sharded on (w-like: `model`; y-like: rows).
+
+Boundaries are equal-nnz and snapped to sub-vector boundaries
+(inspector.shard_boundaries) — the synchronization-free mapping of §4.2.1.2
+at mesh granularity; padding coefficients carry value 0 and are inert through
+both ops and the solver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.inspector import shard_boundaries
+from repro.core.sbbnnls import projected_gradient
+from repro.core.std import PhiTensor
+from repro.data.dmri import LifeProblem
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LifeShards:
+    """Host-side 2-D partition (R x C cells, padded to common sizes)."""
+    # each (R, C, nnz_max) int32/float32; *_local indices are cell-relative
+    dsc_atoms: np.ndarray
+    dsc_voxels_local: np.ndarray
+    dsc_fibers_local: np.ndarray
+    dsc_values: np.ndarray
+    wc_atoms: np.ndarray
+    wc_voxels_local: np.ndarray
+    wc_fibers_local: np.ndarray
+    wc_values: np.ndarray
+    nv_local: int
+    nf_local: int
+    n_theta: int
+    R: int
+    C: int
+    voxel_cuts: np.ndarray      # (R+1,) global voxel boundaries
+    fiber_cuts: np.ndarray      # (C+1,)
+
+
+def build_life_shards(phi: PhiTensor, n_theta: int, R: int, C: int
+                      ) -> LifeShards:
+    atoms = np.asarray(phi.atoms)
+    voxels = np.asarray(phi.voxels)
+    fibers = np.asarray(phi.fibers)
+    values = np.asarray(phi.values)
+
+    # equal-nnz voxel/fiber range boundaries (snap via sorted projections)
+    v_sorted = np.sort(voxels)
+    f_sorted = np.sort(fibers)
+    v_cuts_idx = shard_boundaries(v_sorted, R)
+    f_cuts_idx = shard_boundaries(f_sorted, C)
+    voxel_cuts = np.asarray(
+        [0] + [int(v_sorted[min(i, len(v_sorted) - 1)]) if 0 < i < len(v_sorted)
+               else phi.n_voxels for i in v_cuts_idx[1:]], np.int64)
+    fiber_cuts = np.asarray(
+        [0] + [int(f_sorted[min(i, len(f_sorted) - 1)]) if 0 < i < len(f_sorted)
+               else phi.n_fibers for i in f_cuts_idx[1:]], np.int64)
+    voxel_cuts[-1] = phi.n_voxels
+    fiber_cuts[-1] = phi.n_fibers
+
+    nv_local = int(np.max(np.diff(voxel_cuts))) if R else phi.n_voxels
+    nf_local = int(np.max(np.diff(fiber_cuts))) if C else phi.n_fibers
+
+    row_of = np.searchsorted(voxel_cuts, voxels, side="right") - 1
+    col_of = np.searchsorted(fiber_cuts, fibers, side="right") - 1
+
+    cells: Dict[Tuple[int, int], np.ndarray] = {}
+    nnz_max = 1
+    for r in range(R):
+        for c in range(C):
+            idx = np.nonzero((row_of == r) & (col_of == c))[0]
+            cells[(r, c)] = idx
+            nnz_max = max(nnz_max, idx.size)
+
+    def stack(order_key: str) -> Tuple[np.ndarray, ...]:
+        A = np.zeros((R, C, nnz_max), np.int32)
+        V = np.zeros((R, C, nnz_max), np.int32)
+        F = np.zeros((R, C, nnz_max), np.int32)
+        W = np.zeros((R, C, nnz_max), np.float32)
+        for (r, c), idx in cells.items():
+            key = voxels[idx] if order_key == "voxel" else fibers[idx]
+            o = idx[np.argsort(key, kind="stable")]
+            n = o.size
+            A[r, c, :n] = atoms[o]
+            V[r, c, :n] = voxels[o] - voxel_cuts[r]
+            F[r, c, :n] = fibers[o] - fiber_cuts[c]
+            W[r, c, :n] = values[o]
+        return A, V, F, W
+
+    da, dv, df, dw = stack("voxel")
+    wa, wv, wf, ww = stack("fiber")
+    return LifeShards(
+        dsc_atoms=da, dsc_voxels_local=dv, dsc_fibers_local=df, dsc_values=dw,
+        wc_atoms=wa, wc_voxels_local=wv, wc_fibers_local=wf, wc_values=ww,
+        nv_local=nv_local, nf_local=nf_local, n_theta=n_theta, R=R, C=C,
+        voxel_cuts=voxel_cuts, fiber_cuts=fiber_cuts)
+
+
+def shard_b(shards: LifeShards, b: np.ndarray) -> np.ndarray:
+    """(Nv, Ntheta) -> (R * nv_local, Ntheta) row-padded layout."""
+    out = np.zeros((shards.R * shards.nv_local, b.shape[1]), b.dtype)
+    for r in range(shards.R):
+        lo, hi = shards.voxel_cuts[r], shards.voxel_cuts[r + 1]
+        out[r * shards.nv_local: r * shards.nv_local + (hi - lo)] = b[lo:hi]
+    return out
+
+
+def shard_w(shards: LifeShards, w: np.ndarray) -> np.ndarray:
+    out = np.zeros((shards.C * shards.nf_local,), w.dtype)
+    for c in range(shards.C):
+        lo, hi = shards.fiber_cuts[c], shards.fiber_cuts[c + 1]
+        out[c * shards.nf_local: c * shards.nf_local + (hi - lo)] = w[lo:hi]
+    return out
+
+
+def unshard_w(shards: LifeShards, w_padded: np.ndarray) -> np.ndarray:
+    segs = []
+    for c in range(shards.C):
+        lo, hi = shards.fiber_cuts[c], shards.fiber_cuts[c + 1]
+        segs.append(w_padded[c * shards.nf_local:
+                             c * shards.nf_local + (hi - lo)])
+    return np.concatenate(segs)
+
+
+# ----------------------------------------------------------------------------
+# shard_map SBBNNLS
+# ----------------------------------------------------------------------------
+
+def _row_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_sharded_step(mesh: Mesh, shards_meta: Dict[str, int],
+                      use_reduce_scatter: bool = False):
+    """Builds the jit-able distributed SBBNNLS iteration.
+
+    shards_meta: dict(nv_local=, nf_local=, n_theta=).
+    Inputs (global layouts):
+      phi cell arrays: (R, C, nnz) sharded (rows, model, None)
+      d:        (Na, Ntheta) replicated
+      b:        (R*nv_local, Ntheta) sharded (rows, None)
+      w:        (C*nf_local,) sharded (model,)
+      it:       scalar int32
+    Returns (w_new, loss) with the same shardings.
+    """
+    rows = _row_axes(mesh)
+    nv_l = shards_meta["nv_local"]
+    nf_l = shards_meta["nf_local"]
+
+    cell = P(rows, "model", None)
+    yspec = P(rows, None)
+    wspec = P("model")
+
+    def dsc_local(a, v, f, w_vals, d, w_loc):
+        scaled = jnp.take(w_loc, f) * w_vals
+        contrib = jnp.take(d, a, axis=0) * scaled[:, None]
+        y = jax.ops.segment_sum(contrib, v, num_segments=nv_l,
+                                indices_are_sorted=True)
+        return jax.lax.psum(y, "model")
+
+    def wc_local(a, v, f, w_vals, d, y_loc):
+        dots = jnp.einsum("ct,ct->c", jnp.take(d, a, axis=0),
+                          jnp.take(y_loc, v, axis=0))
+        w = jax.ops.segment_sum(dots * w_vals, f, num_segments=nf_l,
+                                indices_are_sorted=True)
+        return jax.lax.psum(w, rows)
+
+    def dot_y(x, y):
+        return jax.lax.psum(jnp.vdot(x, y), rows)
+
+    def dot_w(x, y):
+        return jax.lax.psum(jnp.vdot(x, y), "model")
+
+    def step(da, dv, df, dw, wa, wv, wf, ww, d, b_loc, w_loc, it):
+        # squeeze the per-device cell dims
+        sq = lambda x: x.reshape(x.shape[-1])
+        da, dv, df, dw = map(sq, (da, dv, df, dw))
+        wa, wv, wf, ww = map(sq, (wa, wv, wf, ww))
+        w_loc = w_loc.reshape(-1)
+        b2 = b_loc.reshape(b_loc.shape[-2], b_loc.shape[-1])
+
+        y = dsc_local(da, dv, df, dw, d, w_loc) - b2          # DSC
+        g = wc_local(wa, wv, wf, ww, d, y)                    # WC
+        gt = projected_gradient(w_loc, g)
+        v = dsc_local(da, dv, df, dw, d, gt)                  # DSC
+
+        def odd(_):
+            return _safe(dot_w(gt, gt), dot_y(v, v))
+
+        def even(_):
+            vv = wc_local(wa, wv, wf, ww, d, v)               # WC
+            vv = projected_gradient(w_loc, vv)
+            return _safe(dot_y(v, v), dot_w(vv, vv))
+
+        alpha = jax.lax.cond(it % 2 == 1, odd, even, operand=None)
+        w_new = jnp.maximum(w_loc - alpha * gt, 0.0)
+        loss = 0.5 * dot_y(y, y)
+        return w_new, loss
+
+    specs_in = (cell, cell, cell, cell, cell, cell, cell, cell,
+                P(None, None), yspec, wspec, P())
+    specs_out = (P("model"), P())
+    return jax.shard_map(step, mesh=mesh, in_specs=specs_in,
+                         out_specs=specs_out, check_vma=False)
+
+
+def _safe(num, den):
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def make_sharded_step_1d(mesh: Mesh, shards_meta: Dict[str, int]):
+    """Paper-faithful 1-D coefficient partitioning (the MPI-LiFE analogue,
+    §7.1.3): every device owns a coefficient block; Y and w are REPLICATED
+    and every SpMV ends in a psum over the whole mesh.  This is the
+    §Perf baseline the 2-D (voxel x fiber) partition improves on: its
+    collective volume scales with the full Y and w vectors instead of the
+    per-shard outputs.
+
+    Inputs: coefficient block arrays shaped (n_dev, nnz_cell) sharded over
+    all axes on dim 0; d, b (Nv, Ntheta), w (Nf,) replicated.
+    """
+    all_axes = _row_axes(mesh) + ("model",)
+    nv = shards_meta["n_voxels"]
+    nf = shards_meta["n_fibers"]
+
+    def dsc_local(a, v, f, vals, d, w):
+        scaled = jnp.take(w, f) * vals
+        contrib = jnp.take(d, a, axis=0) * scaled[:, None]
+        y = jax.ops.segment_sum(contrib, v, num_segments=nv,
+                                indices_are_sorted=True)
+        return jax.lax.psum(y, all_axes)              # full-Y reduction
+
+    def wc_local(a, v, f, vals, d, y):
+        dots = jnp.einsum("ct,ct->c", jnp.take(d, a, axis=0),
+                          jnp.take(y, v, axis=0))
+        w = jax.ops.segment_sum(dots * vals, f, num_segments=nf,
+                                indices_are_sorted=False)
+        return jax.lax.psum(w, all_axes)              # full-w reduction
+
+    def step(a, v, f, vals, d, b, w, it):
+        sq = lambda x: x.reshape(x.shape[-1])
+        a, v, f, vals = map(sq, (a, v, f, vals))
+        y = dsc_local(a, v, f, vals, d, w) - b
+        g = wc_local(a, v, f, vals, d, y)
+        gt = projected_gradient(w, g)
+        vv1 = dsc_local(a, v, f, vals, d, gt)
+
+        def odd(_):
+            return _safe(jnp.vdot(gt, gt), jnp.vdot(vv1, vv1))
+
+        def even(_):
+            vv2 = projected_gradient(w, wc_local(a, v, f, vals, d, vv1))
+            return _safe(jnp.vdot(vv1, vv1), jnp.vdot(vv2, vv2))
+
+        alpha = jax.lax.cond(it % 2 == 1, odd, even, operand=None)
+        w_new = jnp.maximum(w - alpha * gt, 0.0)
+        return w_new, 0.5 * jnp.vdot(y, y)
+
+    cell = P(all_axes, None)
+    return jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(cell, cell, cell, cell, P(None, None), P(None, None),
+                  P(None), P()),
+        out_specs=(P(None), P()), check_vma=False)
+
+
+def life_input_specs_1d(mesh: Mesh, *, n_voxels: int = 247_356,
+                        n_fibers: int = 500_000, n_theta: int = 96,
+                        n_atoms: int = 1_024, nnz: int = 400_000_000):
+    n_dev = int(mesh.devices.size)
+    nnz_cell = -(-nnz // n_dev)
+    f = jax.ShapeDtypeStruct
+    return dict(
+        a=f((n_dev, nnz_cell), jnp.int32), v=f((n_dev, nnz_cell), jnp.int32),
+        fi=f((n_dev, nnz_cell), jnp.int32),
+        vals=f((n_dev, nnz_cell), jnp.float32),
+        d=f((n_atoms, n_theta), jnp.float32),
+        b=f((n_voxels, n_theta), jnp.float32),
+        w=f((n_fibers,), jnp.float32), it=f((), jnp.int32),
+        meta=dict(n_voxels=n_voxels, n_fibers=n_fibers, n_theta=n_theta),
+    )
+
+
+def sharded_state(mesh: Mesh, shards: LifeShards, problem: LifeProblem,
+                  w0: Optional[np.ndarray] = None):
+    """device_put the shard tensors under the mesh shardings."""
+    rows = _row_axes(mesh)
+    cell = NamedSharding(mesh, P(rows, "model", None))
+    ysh = NamedSharding(mesh, P(rows, None))
+    wsh = NamedSharding(mesh, P("model"))
+    rep = NamedSharding(mesh, P(None, None))
+    put = jax.device_put
+    args = dict(
+        da=put(shards.dsc_atoms, cell), dv=put(shards.dsc_voxels_local, cell),
+        df=put(shards.dsc_fibers_local, cell), dw=put(shards.dsc_values, cell),
+        wa=put(shards.wc_atoms, cell), wv=put(shards.wc_voxels_local, cell),
+        wf=put(shards.wc_fibers_local, cell), ww=put(shards.wc_values, cell),
+        d=put(np.asarray(problem.dictionary), rep),
+        b=put(shard_b(shards, np.asarray(problem.b)), ysh),
+        w=put(shard_w(shards, w0 if w0 is not None else
+                      np.ones(problem.phi.n_fibers, np.float32)), wsh),
+    )
+    return args
+
+
+def life_input_specs(mesh: Mesh, *, n_voxels: int = 247_356,
+                     n_fibers: int = 500_000, n_theta: int = 96,
+                     n_atoms: int = 1_024, nnz: int = 400_000_000
+                     ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins at paper scale (Table 9, iFOD1/500k) for the
+    dry-run: 2.5e5 voxels, 5e5 fibers, 4e8 coefficients."""
+    rows = _row_axes(mesh)
+    R = int(np.prod([mesh.shape[a] for a in rows]))
+    C = int(mesh.shape["model"])
+    nv_l = -(-n_voxels // R)
+    nf_l = -(-n_fibers // C)
+    nnz_cell = -(-nnz // (R * C))
+    f = jax.ShapeDtypeStruct
+    cell_i = lambda: f((R, C, nnz_cell), jnp.int32)
+    cell_f = lambda: f((R, C, nnz_cell), jnp.float32)
+    return dict(
+        da=cell_i(), dv=cell_i(), df=cell_i(), dw=cell_f(),
+        wa=cell_i(), wv=cell_i(), wf=cell_i(), ww=cell_f(),
+        d=f((n_atoms, n_theta), jnp.float32),
+        b=f((R * nv_l, n_theta), jnp.float32),
+        w=f((C * nf_l,), jnp.float32),
+        it=f((), jnp.int32),
+        meta=dict(nv_local=nv_l, nf_local=nf_l, n_theta=n_theta),
+    )

@@ -1,0 +1,201 @@
+"""Mesh-axis sharding rules: params, optimizer state (ZeRO-1), batches, caches.
+
+Axis convention (launch/mesh.py): `model` is the TP/EP axis (16), `data`
+(+`pod`) are the batch/FSDP/ZeRO axes.  Rules follow DESIGN.md §4:
+
+  * TP on attention head / FFN feature dims when divisible by |model|,
+    head_dim fallback otherwise (qwen1.5's 20 heads);
+  * KV projections replicated when n_kv < |model| (granite MQA);
+  * MoE experts sharded over `model` (EP); the 1T config additionally
+    FSDP-shards expert weights over `data`;
+  * ZeRO-1: optimizer moments take the param spec plus a `data`(+`pod`)
+    sharding on the first still-free divisible dim — GSPMD then lowers the
+    gradient reduction as reduce-scatter + per-shard update + all-gather;
+  * caches: batch over (`pod`,`data`) when divisible, else sequence; KV heads
+    over `model` when divisible, else sequence over `model`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES
+
+FSDP_PARAM_THRESHOLD = 100e9      # params above this FSDP-shard over `data`
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, shape: Tuple[int, ...]
+               ) -> P:
+    tp = "model" if "model" in mesh.axis_names else None
+    tp_n = axis_size(mesh, tp)
+    name = path.split("/")[-1]
+    div = lambda dim: tp is not None and shape[dim] % tp_n == 0
+
+    if name in ("embed",):
+        return P(tp if div(0) else None, None)
+    if name == "lm_head":
+        return P(None, tp if div(1) else None)
+    if name == "heads":                    # (C, d, V) audio heads
+        return P(None, None, tp if div(2) else None)
+    if name == "pos_embed":
+        return P(None, None)
+    if name in ("scale", "bias", "a_log", "d_skip", "dt_bias", "norm_scale",
+                "conv_bx", "conv_bb", "conv_bc"):
+        return P(*([None] * len(shape)))
+    if name == "router":
+        return P(None, None)
+    if "moe" in path and "shared" not in path and name in ("wi_gate",
+                                                           "wi_up", "wo"):
+        # EP over `model`; the 1T config additionally FSDP-shards the
+        # d_model dim over the batch axes (params cannot fit TP-only)
+        fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+        baxes = batch_axes(mesh)
+        dax: Any = None
+        if fsdp and baxes and shape[1] % axis_size(mesh, baxes) == 0:
+            dax = baxes if len(baxes) > 1 else baxes[0]
+        return P(tp if shape[0] % tp_n == 0 else None, dax, None)
+    if name in ("wq", "wk", "wv", "wi", "wi_gate", "wi_up",
+                "wz", "wx", "wb", "wc", "wdt"):
+        return P(None, tp if div(1) else None)
+    if name in ("wo", "out_proj"):
+        return P(tp if div(0) else None, None)
+    if name in ("bq", "bk", "bv"):
+        return P(tp if div(0) else None)
+    if name in ("conv_wx", "conv_wb", "conv_wc"):   # (K, C)
+        return P(None, tp if div(1) else None)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_shape: Any) -> Any:
+    """PartitionSpec tree for a params(-shaped) tree.
+
+    Stacked layer params have a leading layer dim: rules apply to the
+    trailing dims.  We detect stacking by path prefix ('layers'/'tail').
+    """
+    def rule(path, leaf):
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        stack_dims = 0
+        if ps.startswith("layers/") or ps.startswith("tail/"):
+            stack_dims = 2 if cfg.family == "hybrid" and ps.startswith("layers/") else 1
+        spec = param_spec(cfg, mesh, ps, shape[stack_dims:])
+        return P(*([None] * stack_dims), *spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_specs(cfg: ArchConfig, mesh: Mesh, opt_state_shape: Any) -> Any:
+    """ZeRO-1: every moment leaf shards over the batch axes on its first
+    divisible dim and over `model` on the next (the moment update is
+    elementwise, so any dims work — including the scan-stacked layer dim).
+    GSPMD then lowers the gradient reduction feeding each shard as
+    reduce-scatter."""
+    baxes = batch_axes(mesh)
+    bsize = axis_size(mesh, baxes)
+    tp = "model" if "model" in mesh.axis_names else None
+    tp_n = axis_size(mesh, tp)
+
+    def widen(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        shape = tuple(leaf.shape)
+        parts: list = [None] * len(shape)
+        want = [baxes if len(baxes) > 1 else baxes[0]] + ([tp] if tp else [])
+        sizes = [bsize] + ([tp_n] if tp else [])
+        j = 0
+        for i, dim in enumerate(shape):
+            if j >= len(want):
+                break
+            if dim % sizes[j] == 0 and dim >= max(sizes[j], 2):
+                parts[i] = want[j]
+                j += 1
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(widen, opt_state_shape)
+
+
+# ----------------------------------------------------------------------------
+# Batch / cache shardings
+# ----------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, shape_name: str) -> Dict[str, Any]:
+    seq, batch, kind = SHAPES[shape_name]
+    baxes = batch_axes(mesh)
+    bsize = axis_size(mesh, baxes)
+    b_ax = baxes if batch % bsize == 0 else None
+    tp = "model" if "model" in mesh.axis_names else None
+    tp_n = axis_size(mesh, tp)
+
+    if kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            specs["frame_embeds"] = P(b_ax, None, None)
+            if kind == "train":
+                specs["codes"] = P(b_ax, None, None)
+            return specs
+        specs["tokens"] = P(b_ax, None)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = P(b_ax, None, None)
+            specs["positions"] = P(None, b_ax, None)
+        if kind == "train":
+            specs["labels"] = P(b_ax, None)
+        return specs
+
+    # decode: one token + cache
+    specs = {"cache_index": P()}
+    if cfg.family == "audio":
+        specs["frame_embeds"] = P(b_ax, None, None)
+    else:
+        specs["tokens"] = P(b_ax, None)
+    if cfg.family == "vlm":
+        specs["positions"] = P(None, b_ax, None)
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "audio", "vlm", "hybrid"):
+        kv_div = cfg.n_kv_heads % tp_n == 0 if tp else False
+        if b_ax is not None:
+            s_ax = None if kv_div else tp
+            kv_ax = tp if kv_div else None
+            cache["k"] = P(None, b_ax, s_ax, kv_ax, None)
+        else:
+            # B too small: sequence takes the batch axes (+model if KV
+            # unshardable)
+            s_ax = baxes + ((tp,) if (tp and not kv_div) else ())
+            kv_ax = tp if kv_div else None
+            cache["k"] = P(None, None, s_ax, kv_ax, None)
+        cache["v"] = cache["k"]
+    if cfg.family in ("ssm", "hybrid"):
+        h_div = cfg.ssm_heads % tp_n == 0 if tp else False
+        c_tot = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache["ssm"] = P(None, b_ax, tp if h_div else None, None, None)
+        cache["conv"] = P(None, b_ax, None,
+                          tp if c_tot % tp_n == 0 else None)
+    specs["cache"] = cache
+    return specs
+
+
+def logical_to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda s: isinstance(s, P))

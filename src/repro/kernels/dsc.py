@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for DSC (y = M w), the diffusion-signal computation.
+
+Executor for an inspector ``TilePlan`` over voxel-sorted coefficients
+(DESIGN.md §2).  Geometry per grid step ``t``:
+
+  * ``D`` (dictionary) is VMEM-resident for the whole grid — the TPU analogue
+    of the paper keeping D rows in GPU shared memory.
+  * a coefficient tile contributes ``contrib = D[atoms_t] * scaled_t[:,None]``
+    of shape (C_TILE, Ntheta): the daxpy/BLAS inner loop, vectorized across
+    the 128-lane dimension (Ntheta padded to a lane multiple, mirroring the
+    paper's pad-to-warp-multiple trick).
+  * the voxel scatter becomes a one-hot MXU matmul
+    ``(ROW_TILE x C_TILE) @ (C_TILE x Ntheta)`` into the output row-block —
+    the synchronization-free reduction: the tile plan guarantees a tile
+    touches exactly one row-block, and the sequential TPU grid makes
+    consecutive-tile accumulation race-free (no atomics exist or are needed).
+
+Scalar-prefetched ``row_block`` drives the output BlockSpec index_map, which
+is exactly the inspector/executor split of the paper: the host-side sort +
+tile plan is the inspector, this kernel is the executor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_C_TILE = 256
+DEFAULT_ROW_TILE = 8
+
+
+def _dsc_kernel(row_block_ref,            # scalar prefetch: (T,) int32
+                atoms_ref,                # (1, C_TILE) int32
+                scaled_ref,               # (1, C_TILE) fp
+                local_row_ref,            # (1, C_TILE) int32
+                d_ref,                    # (Na, Ntheta_p) fp, VMEM-resident
+                y_ref):                   # (ROW_TILE, Ntheta_p) output block
+    t = pl.program_id(0)
+    prev = row_block_ref[jnp.maximum(t - 1, 0)]
+    is_first_visit = jnp.logical_or(t == 0, row_block_ref[t] != prev)
+
+    @pl.when(is_first_visit)
+    def _():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    atoms = atoms_ref[0]                                    # (C_TILE,)
+    d_rows = d_ref[atoms]                                   # VMEM gather
+    contrib = d_rows * scaled_ref[0][:, None]               # daxpy tile
+    row_tile = y_ref.shape[0]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (row_tile, atoms.shape[0]), 0)
+        == local_row_ref[0][None, :]
+    ).astype(contrib.dtype)
+    # segment reduction on the MXU (replaces atomicAdd / warp shuffle)
+    y_ref[...] += jax.lax.dot_general(
+        onehot, contrib, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(y_ref.dtype)
+
+
+def dsc_pallas(row_block: jax.Array, atoms_p: jax.Array, scaled_p: jax.Array,
+               local_row_p: jax.Array, dictionary_padded: jax.Array,
+               *, row_tile: int, n_row_blocks: int,
+               interpret: bool = False) -> jax.Array:
+    """Run the DSC executor.  Returns (n_row_blocks*row_tile, Ntheta_padded).
+
+    All operands are pre-padded by :mod:`repro.kernels.ops` from a TilePlan.
+    """
+    n_tiles, c_tile = atoms_p.shape
+    n_theta_p = dictionary_padded.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, c_tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec((1, c_tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec((1, c_tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec(dictionary_padded.shape, lambda t, rb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, n_theta_p), lambda t, rb: (rb[t], 0)),
+    )
+    return pl.pallas_call(
+        _dsc_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_row_blocks * row_tile, n_theta_p), dictionary_padded.dtype),
+        interpret=interpret,
+    )(row_block, atoms_p, scaled_p, local_row_p, dictionary_padded)

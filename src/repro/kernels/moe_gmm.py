@@ -1,0 +1,62 @@
+"""Pallas TPU grouped matmul for MoE expert FFNs (sorted dispatch executor).
+
+The paper's technique re-applied to MoE: tokens are *restructured* (sorted by
+expert id — the data restructuring of §4.1.2), groups are cut into tiles that
+never cross an expert boundary (the sync-free partitioning of §4.2.1.2), and
+the executor streams token tiles against the scalar-prefetch-selected expert
+weight block:
+
+    out[t] = x[t] @ W[expert_of_tile[t]]
+
+Grid is (token_tiles, ff_tiles); the expert id indexes the weight BlockSpec —
+an indirect *block* access, which is the TPU-legal form of the paper's
+indirect array access.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_T_TILE = 128
+DEFAULT_F_TILE = 128
+
+
+def _gmm_kernel(expert_ref, x_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def moe_gmm(expert_of_tile: jax.Array, x_p: jax.Array, w_experts: jax.Array,
+            *, t_tile: int = DEFAULT_T_TILE, f_tile: int = DEFAULT_F_TILE,
+            interpret: bool = False) -> jax.Array:
+    """x_p: (n_tiles*t_tile, d_model) expert-sorted/padded tokens;
+    w_experts: (E, d_model, d_ff); returns (n_tiles*t_tile, d_ff)."""
+    n_rows, d_model = x_p.shape
+    n_exp, _, d_ff = w_experts.shape
+    if n_rows % t_tile:
+        raise ValueError("token rows must be a multiple of t_tile")
+    n_tiles = n_rows // t_tile
+    if expert_of_tile.shape[0] != n_tiles:
+        raise ValueError("expert_of_tile must have one entry per token tile")
+    f_tile = min(f_tile, d_ff)
+    if d_ff % f_tile:
+        raise ValueError("d_ff must be a multiple of f_tile")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles, d_ff // f_tile),
+        in_specs=[
+            pl.BlockSpec((t_tile, d_model), lambda t, f, e: (t, 0)),
+            pl.BlockSpec((1, d_model, f_tile), lambda t, f, e: (e[t], 0, f)),
+        ],
+        out_specs=pl.BlockSpec((t_tile, f_tile), lambda t, f, e: (t, f)),
+    )
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, d_ff), x_p.dtype),
+        interpret=interpret,
+    )(expert_of_tile, x_p, w_experts)

@@ -1,0 +1,110 @@
+"""jit'd wrappers binding inspector TilePlans to the Pallas executors.
+
+`make_dsc` / `make_wc` close over the *static* plan operands (padded index
+tiles, host-computed once, amortized across SBBNNLS iterations and runs) and
+return matvec/rmatvec callables whose only dynamic inputs are ``w`` / ``Y``.
+
+Lane padding: Ntheta is padded to a 128-lane multiple (the paper pads Ntheta
+to warp multiples; zero columns contribute zeros through both ops).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inspector import TilePlan
+from repro.core.std import PhiTensor
+from repro.kernels import dsc as dsc_kernel
+from repro.kernels import wc as wc_kernel
+
+LANES = 128
+
+
+def pad_lanes(x: jax.Array, multiple: int = LANES) -> jax.Array:
+    pad = (-x.shape[-1]) % multiple
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def _padded_operands(phi: PhiTensor, plan: TilePlan):
+    """Static executor operands from a plan (host-side, cached)."""
+    sel = jnp.asarray(plan.sel)
+    atoms_pad = jnp.concatenate([phi.atoms, jnp.zeros((1,), phi.atoms.dtype)])
+    fibers_pad = jnp.concatenate([phi.fibers, jnp.zeros((1,), phi.fibers.dtype)])
+    voxels_pad = jnp.concatenate([phi.voxels, jnp.zeros((1,), phi.voxels.dtype)])
+    values_pad = jnp.concatenate([phi.values, jnp.zeros((1,), phi.values.dtype)])
+    shape = (plan.n_tiles, plan.c_tile)
+    return dict(
+        atoms_p=jnp.take(atoms_pad, sel).reshape(shape),
+        fibers_p=jnp.take(fibers_pad, sel).reshape(shape),
+        voxels_p=jnp.take(voxels_pad, sel).reshape(shape),
+        values_p=jnp.take(values_pad, sel).reshape(shape),
+        local_row_p=jnp.asarray(plan.local_row).reshape(shape),
+        row_block=jnp.asarray(plan.row_block),
+        # padding slots got values 0 via values_pad, so they contribute 0.
+    )
+
+
+def _visited_mask(plan: TilePlan, n_rows: int) -> jax.Array:
+    """Row mask zeroing row-blocks never visited by any tile (kernel leaves
+    them uninitialized)."""
+    visited = np.zeros(plan.n_rows_padded // plan.row_tile, bool)
+    visited[np.asarray(plan.row_block)] = True
+    mask = np.repeat(visited, plan.row_tile)[:n_rows]
+    return jnp.asarray(mask, jnp.float32)
+
+
+def make_dsc(phi_voxel_sorted: PhiTensor, dictionary: jax.Array,
+             plan: TilePlan, *, interpret: bool = True) -> Callable:
+    """Returns matvec(w) -> (Nv, Ntheta) running the DSC Pallas executor."""
+    ops = _padded_operands(phi_voxel_sorted, plan)
+    d_pad = pad_lanes(dictionary)
+    n_theta = dictionary.shape[1]
+    n_voxels = phi_voxel_sorted.n_voxels
+    n_row_blocks = plan.n_rows_padded // plan.row_tile
+    mask = _visited_mask(plan, n_voxels)
+
+    @jax.jit
+    def matvec(w: jax.Array) -> jax.Array:
+        scaled_p = jnp.take(w, ops["fibers_p"].reshape(-1)).reshape(
+            ops["fibers_p"].shape) * ops["values_p"]
+        y = dsc_kernel.dsc_pallas(
+            ops["row_block"], ops["atoms_p"], scaled_p, ops["local_row_p"],
+            d_pad, row_tile=plan.row_tile, n_row_blocks=n_row_blocks,
+            interpret=interpret)
+        # where (not multiply): unvisited blocks are uninitialized memory
+        return jnp.where(mask[:, None] > 0, y[:n_voxels, :n_theta], 0.0)
+
+    return matvec
+
+
+def make_wc(phi_fiber_sorted: PhiTensor, dictionary: jax.Array,
+            plan: TilePlan, *, interpret: bool = True) -> Callable:
+    """Returns rmatvec(Y) -> (Nf,) running the WC Pallas executor."""
+    ops = _padded_operands(phi_fiber_sorted, plan)
+    d_pad = pad_lanes(dictionary)
+    n_fibers = phi_fiber_sorted.n_fibers
+    n_fib_blocks = plan.n_rows_padded // plan.row_tile
+    mask = _visited_mask(plan, n_fibers)
+
+    @jax.jit
+    def rmatvec(y: jax.Array) -> jax.Array:
+        y_pad = pad_lanes(y)
+        # coalesced XLA pre-gather of Y rows (beyond-paper: output-side sort
+        # moves the irregularity to a streaming gather; see DESIGN.md §2)
+        yg_p = jnp.take(
+            jnp.concatenate([y_pad, jnp.zeros((1, y_pad.shape[1]), y_pad.dtype)]),
+            ops["voxels_p"].reshape(-1), axis=0,
+        ).reshape(*ops["voxels_p"].shape, y_pad.shape[1])
+        w = wc_kernel.wc_pallas(
+            ops["row_block"], ops["atoms_p"], yg_p, ops["values_p"],
+            ops["local_row_p"], d_pad, fib_tile=plan.row_tile,
+            n_fib_blocks=n_fib_blocks, interpret=interpret)
+        return jnp.where(mask > 0, w.reshape(-1)[:n_fibers], 0.0)
+
+    return rmatvec

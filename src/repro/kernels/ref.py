@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (same operands, same padding).
+
+These mirror the executor math exactly — including tile padding and the
+one-hot segment reduction — so kernel tests can assert elementwise equality,
+while `repro.core.spmv` provides the independent mathematical oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dsc_ref(row_block, atoms_p, scaled_p, local_row_p, dictionary_padded,
+            *, row_tile: int, n_row_blocks: int) -> jax.Array:
+    n_tiles, c_tile = atoms_p.shape
+    n_theta_p = dictionary_padded.shape[1]
+    out = jnp.zeros((n_row_blocks * row_tile, n_theta_p), dictionary_padded.dtype)
+    d_rows = dictionary_padded[atoms_p]                      # (T, C, Np)
+    contrib = d_rows * scaled_p[..., None]                   # (T, C, Np)
+    rows = row_block[:, None] * row_tile + local_row_p       # (T, C) global rows
+    return out.at[rows.reshape(-1)].add(contrib.reshape(-1, n_theta_p))
+
+
+def wc_ref(row_block, atoms_p, yg_p, vals_p, local_row_p, dictionary_padded,
+           *, fib_tile: int, n_fib_blocks: int) -> jax.Array:
+    d_rows = dictionary_padded[atoms_p]                      # (T, C, Np)
+    dots = jnp.sum(d_rows * yg_p, axis=-1) * vals_p          # (T, C)
+    rows = row_block[:, None] * fib_tile + local_row_p       # (T, C)
+    out = jnp.zeros((n_fib_blocks * fib_tile,), dictionary_padded.dtype)
+    out = out.at[rows.reshape(-1)].add(dots.reshape(-1))
+    return out.reshape(n_fib_blocks, fib_tile)
+
+
+def moe_gmm_ref(x_p, w_experts, expert_of_tile) -> jax.Array:
+    """Grouped matmul oracle: x_p (T, TT, d), w (E, d, f) -> (T, TT, f)."""
+    return jnp.einsum("gcd,gdf->gcf", x_p, w_experts[expert_of_tile])

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for WC (w = M^T y), the weight computation.
+
+Executor for a ``TilePlan`` over **fiber-sorted** coefficients — the
+beyond-paper TPU restructuring choice (the paper picks atom-sorted WC on
+CPU/GPU for dictionary reuse; on TPU the scatter is the serial hazard, so we
+sort by the output dimension and let XLA pre-gather ``Y`` rows as one
+coalesced stream; see DESIGN.md §2).
+
+Per grid step:
+
+  * ``D`` stays VMEM-resident; atom rows are gathered in-VMEM,
+  * the dot-product inner loop (paper: BLAS ``dot`` / warp ``SHFL``
+    reduction) is a lane-dimension multiply + row reduction on the VPU:
+    ``dots = sum(D[atoms_t] * Yg_t, axis=-1) * vals_t``,
+  * the fiber scatter is the one-hot segment reduction into a
+    (1, FIB_TILE) output block, accumulated across consecutive tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_C_TILE = 256
+DEFAULT_FIB_TILE = 128
+
+
+def _wc_kernel(row_block_ref,             # scalar prefetch: (T,) int32
+               atoms_ref,                 # (1, C_TILE) int32
+               yg_ref,                    # (1, C_TILE, Ntheta_p) fp
+               vals_ref,                  # (1, C_TILE) fp
+               local_row_ref,             # (1, C_TILE) int32
+               d_ref,                     # (Na, Ntheta_p) fp, VMEM-resident
+               w_ref):                    # (1, FIB_TILE) output block
+    t = pl.program_id(0)
+    prev = row_block_ref[jnp.maximum(t - 1, 0)]
+    is_first_visit = jnp.logical_or(t == 0, row_block_ref[t] != prev)
+
+    @pl.when(is_first_visit)
+    def _():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    atoms = atoms_ref[0]                                    # (C_TILE,)
+    d_rows = d_ref[atoms]                                   # VMEM gather
+    dots = jnp.sum(d_rows * yg_ref[0], axis=-1) * vals_ref[0]   # (C_TILE,)
+    fib_tile = w_ref.shape[1]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (fib_tile, dots.shape[0]), 0)
+        == local_row_ref[0][None, :]
+    ).astype(dots.dtype)
+    w_ref[...] += jax.lax.dot_general(
+        onehot, dots[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(w_ref.dtype).reshape(1, fib_tile)
+
+
+def wc_pallas(row_block: jax.Array, atoms_p: jax.Array, yg_p: jax.Array,
+              vals_p: jax.Array, local_row_p: jax.Array,
+              dictionary_padded: jax.Array, *, fib_tile: int,
+              n_fib_blocks: int, interpret: bool = False) -> jax.Array:
+    """Run the WC executor.  Returns (n_fib_blocks, fib_tile) partial weights."""
+    n_tiles, c_tile = atoms_p.shape
+    n_theta_p = dictionary_padded.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, c_tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec((1, c_tile, n_theta_p), lambda t, rb: (t, 0, 0)),
+            pl.BlockSpec((1, c_tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec((1, c_tile), lambda t, rb: (t, 0)),
+            pl.BlockSpec(dictionary_padded.shape, lambda t, rb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, fib_tile), lambda t, rb: (rb[t], 0)),
+    )
+    return pl.pallas_call(
+        _wc_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_fib_blocks, fib_tile), dictionary_padded.dtype),
+        interpret=interpret,
+    )(row_block, atoms_p, yg_p, vals_p, local_row_p, dictionary_padded)

@@ -1,0 +1,70 @@
+"""train_step / serve_step builders shared by the launcher and the dry-run.
+
+`make_train_step(cfg, opt)` returns the canonical fused step:
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with value_and_grad over models.transformer.loss_fn and the optimizer update
+inline (so the compiled artifact contains the full iteration the roofline
+measures — forward, backward, reduction, update).
+
+`make_serve_step(cfg)` returns the one-token decode step; `make_prefill(cfg)`
+the prefill.  All are pure and jit-able with explicit shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+
+def make_train_step(cfg: ArchConfig, opt: OptConfig,
+                    grad_specs: Any = None) -> Callable:
+    """grad_specs: optional PartitionSpec tree (usually the param specs) —
+    constrains gradients so GSPMD computes each dW shard locally and reduces
+    over the data axes only, instead of replicating dW and all-reducing over
+    the whole mesh."""
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch), has_aux=True)(params)
+        if grad_specs is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_specs)
+        params, opt_state, opt_metrics = apply_updates(
+            opt, params, grads, opt_state)
+        return params, opt_state, {**metrics, **opt_metrics,
+                                   "total_loss": loss}
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = T.loss_fn(cfg, params, batch)
+        return metrics
+    return eval_step
+
+
+def make_prefill(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, batch):
+        return T.decode_step(cfg, params, batch)
+    return serve_step
+
+
+def init_all(cfg: ArchConfig, opt: OptConfig, key) -> Tuple[Any, Any]:
+    params = T.init_params(cfg, key)
+    return params, init_opt_state(opt, params)
+
+
+def abstract_state(cfg: ArchConfig, opt: OptConfig):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    return jax.eval_shape(
+        lambda k: init_all(cfg, opt, k), jax.random.PRNGKey(0))

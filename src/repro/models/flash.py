@@ -1,0 +1,137 @@
+"""Flash attention (causal, GQA) in pure JAX with a custom VJP.
+
+Why custom_vjp: differentiating a lax.scan saves every per-step carry — for
+the chunked-attention scan that is O(S * n_pairs) and was measured at ~50 GB
+/device on the 4k train dry-run.  Defining the backward by hand (standard
+flash-attention recompute) keeps residuals at O(S) — q, k, v, out, lse — and
+recomputes chunk-pair probabilities transiently.
+
+The pair-list scan walks only lower-triangular (i, j<=i) chunk pairs, so HLO
+FLOPs equal the true causal cost (no masked-out waste) — this is what the
+roofline's useful-flops ratio sees.  On the TPU target this maps onto a fused
+kernel (splash-style); this formulation defines the memory-feasible lowering
+and the exact reference semantics.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _pairs(nq: int) -> np.ndarray:
+    return np.asarray([(i, j) for i in range(nq) for j in range(i + 1)],
+                      np.int32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q: Array, k: Array, v: Array, chunk: int) -> Array:
+    """q: (B,S,KV,G,hd), k/v: (B,S,KV,hd) -> (B,S,KV,G,hd).  Causal."""
+    out, _ = _fwd(q, k, v, chunk)
+    return out
+
+
+def _fwd(q, k, v, chunk: int):
+    B, S, KV, G, hd = q.shape
+    assert S % chunk == 0
+    n = S // chunk
+    scale = 1.0 / np.sqrt(hd)
+    qc = q.reshape(B, n, chunk, KV, G, hd)
+    kc = k.reshape(B, n, chunk, KV, hd)
+    vc = v.reshape(B, n, chunk, KV, hd)
+
+    acc0 = jnp.zeros((n, B, chunk, KV, G, hd), jnp.float32)
+    m0 = jnp.full((n, B, chunk, KV, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((n, B, chunk, KV, G), jnp.float32)
+    mask = _diag_mask(chunk)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qi, kj).astype(jnp.float32) * scale
+        s = jnp.where((i == j) & ~mask[None, :, None, None, :], -1e30, s)
+        m_prev = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_prev = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        a_new = a_prev * alpha[..., None] + jnp.einsum(
+            "bqkgs,bskh->bqkgh", p.astype(v.dtype), vj).astype(jnp.float32)
+        return ((jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0),
+                 jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0),
+                 jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)), None)
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.asarray(_pairs(n)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(1, 0, 2, 3, 4, 5) \
+        .reshape(B, S, KV, G, hd).astype(q.dtype)
+    lse = (m + jnp.log(l_safe)).transpose(1, 0, 2, 3, 4) \
+        .reshape(B, S, KV, G)
+    return out, (q, k, v, out, lse)
+
+
+def _diag_mask(chunk: int) -> Array:
+    qi = jnp.arange(chunk)
+    return qi[:, None] >= qi[None, :]          # (q, s) allowed
+
+
+def _bwd(chunk: int, res, dout):
+    q, k, v, out, lse = res
+    B, S, KV, G, hd = q.shape
+    n = S // chunk
+    scale = 1.0 / np.sqrt(hd)
+    qc = q.reshape(B, n, chunk, KV, G, hd)
+    kc = k.reshape(B, n, chunk, KV, hd)
+    vc = v.reshape(B, n, chunk, KV, hd)
+    doc = dout.reshape(B, n, chunk, KV, G, hd)
+    lsec = lse.reshape(B, n, chunk, KV, G)
+    # D_i = rowsum(dout * out)
+    dsum = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                   axis=-1).reshape(B, n, chunk, KV, G)
+    mask = _diag_mask(chunk)
+
+    dq0 = jnp.zeros((n, B, chunk, KV, G, hd), jnp.float32)
+    dk0 = jnp.zeros((n, B, chunk, KV, hd), jnp.float32)
+    dv0 = jnp.zeros((n, B, chunk, KV, hd), jnp.float32)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        di = jax.lax.dynamic_index_in_dim(doc, i, 1, keepdims=False)
+        lsei = jax.lax.dynamic_index_in_dim(lsec, i, 1, keepdims=False)
+        dsi = jax.lax.dynamic_index_in_dim(dsum, i, 1, keepdims=False)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qi, kj).astype(jnp.float32) * scale
+        s = jnp.where((i == j) & ~mask[None, :, None, None, :], -1e30, s)
+        p = jnp.exp(s - lsei[..., None])                     # (B,q,KV,G,s)
+        dv_j = jnp.einsum("bqkgs,bqkgh->bskh", p, di.astype(jnp.float32))
+        dp = jnp.einsum("bqkgh,bskh->bqkgs", di, vj).astype(jnp.float32)
+        ds = p * (dp - dsi[..., None]) * scale
+        dq_i = jnp.einsum("bqkgs,bskh->bqkgh", ds, kj)
+        dk_j = jnp.einsum("bqkgs,bqkgh->bskh", ds, qi.astype(jnp.float32))
+        dq = dq.at[i].add(dq_i)
+        dk = dk.at[j].add(dk_j)
+        dv = dv.at[j].add(dv_j)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
+                                   jnp.asarray(_pairs(n)))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, G, hd).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd).astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(lambda q, k, v, c: _fwd(q, k, v, c), _bwd)

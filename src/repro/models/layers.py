@@ -1,0 +1,335 @@
+"""Core transformer layers — functional, explicit param pytrees (no flax).
+
+Every init_* returns a nested dict of arrays; every apply function is pure.
+Attention supports GQA/MQA, optional QKV bias (qwen1.5), RoPE / M-RoPE
+(qwen2-vl) / sinusoidal (musicgen) / learned (granite) positions, a
+blockwise (flash-style, triangular pair-list) path for long sequences, and a
+KV-cache decode path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------------
+# Initializers & norms
+# ----------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype)) * p["scale"] + p["bias"]
+
+
+def apply_norm(kind: str, p: Params, x: Array) -> Array:
+    return rmsnorm(p, x) if kind == "rms" else layernorm(p, x)
+
+
+def init_norm(kind: str, d: int, dtype) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rms" else init_layernorm(d, dtype)
+
+
+# ----------------------------------------------------------------------------
+# Positional encodings
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: Tuple[int, int, int]) -> Array:
+    """Multimodal RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w);
+    head_dim/2 frequency slots are split across the three sections."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                    # (hd/2,)
+    # section assignment per frequency slot
+    sec = np.zeros(hd // 2, np.int32)
+    ofs = 0
+    for i, s in enumerate(sections):
+        sec[ofs: ofs + s] = i
+        ofs += s
+    sec_j = jnp.asarray(sec)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32).transpose(1, 2, 0),   # (B, S, 3)
+        jnp.broadcast_to(sec_j[None, None, :],
+                         positions.shape[1:] + (hd // 2,)), axis=-1)
+    angles = pos * freqs                              # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: Array, d_model: int) -> Array:
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------------
+# Attention (GQA / MQA), blockwise + decode paths
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope: str = "rope"           # rope | mrope | none
+    rope_theta: float = 1e4
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+
+
+def init_attention(key, spec: AttnSpec, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    H, KV, hd, d = spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.d_model
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, spec: AttnSpec, x: Array,
+                 positions: Array) -> Tuple[Array, Array, Array]:
+    B, S, _ = x.shape
+    H, KV, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if spec.rope == "rope":
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2d, spec.rope_theta)
+        k = apply_rope(k, pos2d, spec.rope_theta)
+    elif spec.rope == "mrope":
+        q = apply_mrope(q, positions, spec.rope_theta, spec.mrope_sections)
+        k = apply_mrope(k, positions, spec.rope_theta, spec.mrope_sections)
+    return q, k, v
+
+
+def dense_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    kv_offset: int = 0) -> Array:
+    """Reference attention; fine for short S.  q: (B,Sq,H,hd) k/v: (B,Skv,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / np.sqrt(hd)
+    if causal:
+        qpos = kv_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(qpos >= kpos, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, q_chunk: int = 512,
+                        kv_chunk: int = 512) -> Array:
+    """Causal flash-style attention via a triangular (i, j<=i) pair-list scan.
+
+    Computes only the lower-triangular chunk pairs, so HLO FLOPs match the
+    causal roofline (no masked-out waste), at the cost of a sequential scan —
+    on the TPU target this path is replaced by a fused kernel; here it defines
+    the memory-feasible lowering for 32k+ sequences.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    assert S % q_chunk == 0 and S % kv_chunk == 0
+    nq, nk = S // q_chunk, S // kv_chunk
+    assert q_chunk == kv_chunk, "triangular pairing assumes equal chunks"
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+
+    pairs = np.asarray([(i, j) for i in range(nq) for j in range(i + 1)], np.int32)
+    scale = 1.0 / np.sqrt(hd)
+
+    acc0 = jnp.zeros((nq, B, q_chunk, KV, G, hd), jnp.float32)
+    m0 = jnp.full((nq, B, q_chunk, KV, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((nq, B, q_chunk, KV, G), jnp.float32)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qi, kj).astype(jnp.float32) * scale
+        diag = i == j
+        qpos = jnp.arange(q_chunk)[:, None]
+        kpos = jnp.arange(kv_chunk)[None, :]
+        mask = jnp.where(diag, (qpos >= kpos), True)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_prev = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_prev = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_prev = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        a_new = a_prev * alpha[..., None] + jnp.einsum(
+            "bqkgs,bskh->bqkgh", p.astype(q.dtype), vj).astype(jnp.float32)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def _self_attention(q: Array, k: Array, v: Array, *,
+                    block_threshold: int = 1024) -> Array:
+    """Causal self-attention; flash (custom-VJP chunked) beyond threshold.
+
+    For the flash path KV heads are expanded to H *before* the kernel and all
+    three tensors are constrained to the heads-over-`model` TP layout, so the
+    pair scan is collective-free (the expanded KV is TP-sharded, hence cheap;
+    dk/dv sum back over the expansion automatically).
+    """
+    from repro.distributed import hints
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if S <= block_threshold and not hints.active():
+        return dense_attention(q, k, v, causal=True)
+    from repro.models.flash import flash_attention
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    q = hints.attn_heads(q)
+    k = hints.attn_heads(k)
+    v = hints.attn_heads(v)
+    if S <= block_threshold:
+        out = dense_attention(q, k, v, causal=True)
+    else:
+        chunk = 512 if S % 512 == 0 else _chunk_of(S)
+        out = flash_attention(q[:, :, :, None, :], k, v, chunk)
+        out = out.reshape(B, S, H, hd)
+    return hints.attn_heads(out)
+
+
+def attention_train(p: Params, spec: AttnSpec, x: Array, positions: Array,
+                    ) -> Array:
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, spec, x, positions)
+    out = _self_attention(q, k, v)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def attention_prefill(p: Params, spec: AttnSpec, x: Array, positions: Array,
+                      ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Prefill: returns (output, (k_cache, v_cache))."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, spec, x, positions)
+    out = _self_attention(q, k, v)
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def attention_decode(p: Params, spec: AttnSpec, x: Array, positions: Array,
+                     cache: Tuple[Array, Array], cache_index: Array,
+                     ) -> Tuple[Array, Tuple[Array, Array]]:
+    """Single-token decode against a (B, S_max, KV, hd) cache.
+
+    cache_index: current fill level (tokens already in cache).
+    """
+    B, S1, _ = x.shape  # S1 == 1
+    q, k_new, v_new = _project_qkv(p, spec, x, positions)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, cache_index, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, cache_index, 1)
+    H, KV, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    G = H // KV
+    qg = q.reshape(B, S1, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32) / np.sqrt(hd)
+    valid = jnp.arange(k_cache.shape[1]) <= (cache_index + S1 - 1)   # (S_max,)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache).reshape(B, S1, H * hd)
+    return out @ p["wo"], (k_cache, v_cache)
+
+
+def _chunk_of(s: int) -> int:
+    for c in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"wi_gate": dense_init(ks[0], d_model, d_ff, dtype),
+                "wi_up": dense_init(ks[1], d_model, d_ff, dtype),
+                "wo": dense_init(ks[2], d_ff, d_model, dtype)}
+    return {"wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wo": dense_init(ks[1], d_ff, d_model, dtype)}
+
+
+def mlp(p: Params, x: Array) -> Array:
+    if "wi_gate" in p:
+        return (jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

@@ -1,0 +1,222 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked train/prefill + decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024): within-chunk quadratic
+term + inter-chunk recurrent state passing.  The chunked scan keeps HLO size
+O(1) in sequence length and the recurrence O(S/Q) sequential steps; decode is
+the O(1) state update, which is what makes `long_500k` feasible for the
+SSM/hybrid architectures.
+
+Projections are stored *split* (z, x, B, C, dt) rather than as one fused
+in_proj, and the depthwise causal conv is likewise split per stream: the
+fused layout would force GSPMD to reshard at every `jnp.split` along a
+`model`-sharded feature axis, while the split layout shards each stream
+cleanly (TP on heads/channels).  Mathematically identical to the fused form.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rmsnorm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_mamba2(key, d_model: int, *, d_state: int, head_dim: int = 64,
+                expand: int = 2, d_conv: int = 4, n_groups: int = 1,
+                dtype=jnp.bfloat16) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    gn = n_groups * d_state
+    ks = jax.random.split(key, 9)
+    conv = lambda k, c: (jax.random.normal(k, (d_conv, c), jnp.float32) * 0.1
+                         ).astype(dtype)
+    return {
+        "wz": dense_init(ks[0], d_model, d_inner, dtype),
+        "wx": dense_init(ks[1], d_model, d_inner, dtype),
+        "wb": dense_init(ks[2], d_model, gn, dtype),
+        "wc": dense_init(ks[3], d_model, gn, dtype),
+        "wdt": dense_init(ks[4], d_model, n_heads, dtype),
+        "conv_wx": conv(ks[5], d_inner),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_wb": conv(ks[6], gn),
+        "conv_bb": jnp.zeros((gn,), dtype),
+        "conv_wc": conv(ks[7], gn),
+        "conv_bc": jnp.zeros((gn,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[8], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(w: Array, bias: Array, x: Array) -> Array:
+    """Depthwise causal conv + SiLU over the sequence dim.  x: (B, S, C)."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1], :] * w[i] for i in range(d_conv))
+    return jax.nn.silu(out + bias)
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b: Array, c: Array,
+                chunk: int, h0: Array | None = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)   dt: (B, S, H)   a: (H,) negative decay rates
+    b, c: (B, S, G, N) with G groups broadcast over heads.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert S % chunk == 0
+    nch = S // chunk
+    rep = H // G
+
+    # heads split as (g, r): avoids materializing head-repeated B/C tensors
+    xr = x.reshape(B, nch, chunk, G, rep, P)
+    dtr = dt.reshape(B, nch, chunk, G, rep)
+    bg = b.reshape(B, nch, chunk, G, N)
+    cg = c.reshape(B, nch, chunk, G, N)
+
+    da = dtr * a.reshape(G, rep)[None, None, None]        # (B,c,Q,G,r) negative
+    da_cs = jnp.cumsum(da, axis=2)
+    # within-chunk decay L[q, s] = exp(sum_{s<t<=q} da_t), lower-triangular.
+    # seg must be clamped BEFORE exp: in the masked (s > q) region it is
+    # large-positive, and although where() discards exp(inf) in the forward,
+    # the VJP computes 0 * inf = NaN.
+    seg = da_cs[:, :, :, None] - da_cs[:, :, None, :]     # (B,c,Q,Q,G,r)
+    qi = jnp.arange(chunk)
+    tri = (qi[:, None] >= qi[None, :])[None, None, :, :, None, None]
+    L = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+
+    xdt = xr * dtr[..., None]                             # (B,c,Q,G,r,P)
+    cb = jnp.einsum("bcqgn,bcsgn->bcqsg", cg, bg)         # shared across r
+    y_diag = jnp.einsum("bcqsg,bcqsgr,bcsgrp->bcqgrp",
+                        cb, L.astype(cg.dtype), xdt)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(da_cs[:, :, -1:] - da_cs)      # (B,c,Q,G,r)
+    states = jnp.einsum("bcqgn,bcqgr,bcqgrp->bcgrpn",
+                        bg, decay_to_end.astype(bg.dtype), xdt)
+    chunk_decay = jnp.exp(da_cs[:, :, -1])                # (B,c,G,r)
+
+    def scan_body(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None].astype(h.dtype) + st.astype(h.dtype)
+        return h_new, h.astype(st.dtype)
+
+    h_init = (jnp.zeros((B, G, rep, P, N), jnp.float32) if h0 is None
+              else h0.reshape(B, G, rep, P, N).astype(jnp.float32))
+    h_last, h_prevs = jax.lax.scan(
+        scan_body, h_init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                      # (B,c,G,r,P,N)
+
+    decay_from_start = jnp.exp(da_cs)                     # (B,c,Q,G,r)
+    y_off = jnp.einsum("bcqgn,bcgrpn,bcqgr->bcqgrp",
+                       cg, h_prevs.astype(cg.dtype),
+                       decay_from_start.astype(cg.dtype))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, h_last.reshape(B, H, P, N)
+
+
+def mamba2_prefill(p: Params, x: Array, *, d_state: int, head_dim: int = 64,
+                   expand: int = 2, n_groups: int = 1, chunk: int = 128):
+    """Full-sequence forward.  x: (B, S, d_model).
+
+    Returns (y, ssm_state (B,H,P,N), conv_state (B, d_conv-1, C_x+C_b+C_c)).
+    """
+    B, S, d_model = x.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    z = x @ p["wz"]
+    xs_raw = x @ p["wx"]
+    b_raw = x @ p["wb"]
+    c_raw = x @ p["wc"]
+    dt = x @ p["wdt"]
+    xs = _causal_conv(p["conv_wx"], p["conv_bx"], xs_raw)
+    b = _causal_conv(p["conv_wb"], p["conv_bb"], b_raw)
+    c = _causal_conv(p["conv_wc"], p["conv_bc"], c_raw)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(B, S, n_heads, head_dim)
+    bh = b.reshape(B, S, n_groups, d_state)
+    ch = c.reshape(B, S, n_groups, d_state)
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, h_last = ssd_chunked(xh, dt, a, bh, ch, min(chunk, xh.shape[1]))
+    y = y[:, :S]
+    y = y + xs.reshape(B, S, n_heads, head_dim) \
+        * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = _gated_norm(p, y.reshape(B, S, d_inner), z).astype(x.dtype)
+    d_conv = p["conv_wx"].shape[0]
+    raw = jnp.concatenate([xs_raw, b_raw, c_raw], axis=-1)
+    if S >= d_conv - 1:
+        conv_state = raw[:, S - (d_conv - 1):, :]
+    else:
+        conv_state = jnp.pad(raw, ((0, 0), (d_conv - 1 - S, 0), (0, 0)))
+    return y @ p["out_proj"], h_last, conv_state
+
+
+def mamba2_forward(p: Params, x: Array, **kw) -> Array:
+    return mamba2_prefill(p, x, **kw)[0]
+
+
+def mamba2_decode(p: Params, x: Array, ssm_state: Array, conv_state: Array,
+                  *, d_state: int, head_dim: int = 64, expand: int = 2,
+                  n_groups: int = 1):
+    """Single-token decode.  x: (B, 1, d_model).
+
+    Returns (y (B,1,d_model), new_ssm_state, new_conv_state).
+    """
+    B, S1, d_model = x.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    gn = n_groups * d_state
+    z = x @ p["wz"]
+    xs_raw = x @ p["wx"]
+    b_raw = x @ p["wb"]
+    c_raw = x @ p["wc"]
+    dt = x @ p["wdt"]
+    raw = jnp.concatenate([xs_raw, b_raw, c_raw], axis=-1)
+    window = jnp.concatenate([conv_state, raw], axis=1)    # (B, d_conv, C)
+    new_conv_state = window[:, 1:, :]
+    wx, wb_, wc_ = window[..., :d_inner], window[..., d_inner:d_inner + gn], \
+        window[..., d_inner + gn:]
+    conv1 = lambda w, bias, win: jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, w) + bias)
+    xs = conv1(p["conv_wx"], p["conv_bx"], wx)
+    b = conv1(p["conv_wb"], p["conv_bb"], wb_)
+    c = conv1(p["conv_wc"], p["conv_bc"], wc_)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(B, n_heads, head_dim)
+    rep = n_heads // n_groups
+    bh = jnp.repeat(b.reshape(B, n_groups, d_state), rep, axis=1)
+    ch = jnp.repeat(c.reshape(B, n_groups, d_state), rep, axis=1)
+    decay = jnp.exp(dt * a[None, :])                       # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(jnp.float32),
+                     xh.astype(jnp.float32), bh.astype(jnp.float32))
+    h_new = (ssm_state * decay[..., None, None] + upd).astype(ssm_state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new.astype(jnp.float32),
+                   ch.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(p, y, z).astype(x.dtype)
+    return y @ p["out_proj"], h_new, new_conv_state
+
+
+def _gated_norm(p: Params, y: Array, z: Array) -> Array:
+    """RMSNorm(y * silu(z)) — Mamba2's gated output norm."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return rmsnorm({"scale": p["norm_scale"]}, y)

@@ -1,0 +1,158 @@
+"""Mixture-of-Experts layer with sort-based (restructured) dispatch.
+
+This is the paper's technique promoted to a first-class framework feature:
+the router produces an *indirection vector* (token -> expert), and instead of
+scattering with atomics we **restructure** — sort token assignments by expert
+id — so each expert's tokens form a contiguous sub-vector, execute a grouped
+matmul over segment boundaries (the BLAS-call analogue; `kernels/moe_gmm.py`
+is the Pallas executor for the TPU hot path), and un-sort the results.
+
+For distribution, experts shard over the `model` mesh axis (EP) and the
+dispatch becomes an all-to-all along that axis — the computation-partitioning
+choice of §4.1.3 at mesh granularity.
+
+The dense-capacity formulation below (fixed capacity per expert, sort +
+static slicing) is jit/GSPMD-friendly: every shape is static, tokens over
+capacity are dropped (standard Switch-style), and dropped slots carry zero
+weight.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, n_shared: int,
+             dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "wi_gate": _expert_init(ks[1], n_experts, d_model, d_ff, dtype),
+        "wi_up": _expert_init(ks[2], n_experts, d_model, d_ff, dtype),
+        "wo": _expert_init(ks[3], n_experts, d_ff, d_model, dtype),
+    }
+    if n_shared:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d_model, d_ff * n_shared, "swiglu", dtype)
+    return p
+
+
+def _expert_init(key, e: int, d_in: int, d_out: int, dtype) -> Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (e, d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def moe_ffn(p: Params, x: Array, *, top_k: int, capacity_factor: float = 1.25,
+            ) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    GShard-style *grouped* dispatch: tokens are split into G dispatch groups
+    (G = |batch mesh axes|, 1 off-mesh), each group restructures (sorts by
+    expert) **locally**, and only the (group, expert)-bucketed activations
+    cross the mesh — an all-to-all along `model` — instead of a global sort
+    shuffling every token across all chips.  Math is identical for G=1 and
+    differs only in per-group (vs global) capacity truncation otherwise.
+    """
+    from repro.distributed import hints
+    B, S, d = x.shape
+    n_tokens = B * S
+    n_experts = p["router"].shape[1]
+    groups = hints.axis_size(hints.batch_axes()) if hints.active() else 1
+    if n_tokens % groups:
+        groups = 1
+    tg = n_tokens // groups
+    xg = x.reshape(groups, tg, d)
+    xg = hints.constrain(xg, hints.batch_axes(), None, None)
+
+    # per-group capacity, multiple of 8 for clean layouts
+    capacity = int(capacity_factor * tg * top_k / n_experts)
+    capacity = max(8, -(-capacity // 8) * 8)
+
+    out_g, aux = _dispatch_group(p, xg, top_k, capacity, n_experts)
+    out = out_g.reshape(n_tokens, d)
+
+    if "shared" in p:
+        from repro.models.layers import mlp
+        out = out + mlp(p["shared"], xg.reshape(n_tokens, d))
+    return out.reshape(B, S, d), aux
+
+
+def _dispatch_group(p: Params, xg: Array, top_k: int, capacity: int,
+                    n_experts: int) -> Tuple[Array, Array]:
+    """Vectorized over groups.  xg: (G, T, d)."""
+    from repro.distributed import hints
+    G, T, d = xg.shape
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)      # (G, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style), averaged over groups
+    me = probs.mean(axis=1)                                  # (G, E)
+    onehot_counts = jnp.sum(
+        jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.float32),
+        axis=(1, 2)) / (T * top_k)                           # (G, E)
+    aux = n_experts * jnp.mean(jnp.sum(me * onehot_counts, axis=-1))
+
+    # ---- local restructuring: sort (token, k) slots by expert id ----
+    # Scatter-free formulation: both the dispatch (slot -> token) and the
+    # combine (token -> slot) are *gathers* through the sort permutation and
+    # its inverse.  Scatter-adds would (a) serialize on TPU and (b) promote
+    # bf16 buffers to f32 on the CPU validation backend; gathers do neither.
+    tk = T * top_k
+    flat_expert = expert_ids.reshape(G, tk)
+    flat_gate = gate_vals.reshape(G, tk).astype(xg.dtype)
+    order = jnp.argsort(flat_expert, axis=1)                 # restructuring
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=1)
+    inv_order = jnp.argsort(order, axis=1)                   # slot -> rank
+
+    # segment starts per expert + rank of each slot within its segment
+    first = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(n_experts), side="left"))(sorted_expert)   # (G, E)
+    cap_pos = inv_order - jnp.take_along_axis(first, flat_expert, axis=1)
+    keep = cap_pos < capacity                                # (G, Tk)
+    slot_id = jnp.clip(flat_expert * capacity + cap_pos, 0,
+                       n_experts * capacity - 1)
+
+    # dispatch: which token fills expert slot (e, c)?  pure gather
+    idx_sorted = first[:, :, None] + jnp.arange(capacity)[None, None, :]
+    idx_c = jnp.clip(idx_sorted, 0, tk - 1).reshape(G, -1)   # (G, E*cap)
+    e_at = jnp.take_along_axis(sorted_expert, idx_c, axis=1)
+    valid = ((idx_sorted.reshape(G, -1) < tk)
+             & (e_at == jnp.repeat(jnp.arange(n_experts), capacity)[None]))
+    tok_at = jnp.take_along_axis(order, idx_c, axis=1) // top_k
+    xe = jnp.where(valid[..., None],
+                   jnp.take_along_axis(xg, tok_at[..., None], axis=1), 0)
+    xe = xe.reshape(G, n_experts, capacity, d)
+    # EP: experts over `model`, groups over the batch axes (all-to-all)
+    xe = hints.constrain(xe, hints.batch_axes(), "model", None, None)
+
+    # expert FFN over contiguous segments (BLAS-call analogue; the Pallas
+    # moe_gmm kernel executes this on the TPU target)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"])
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, p["wo"])
+    ye = hints.constrain(ye, hints.batch_axes(), "model", None, None)
+
+    # combine: per-k gather + accumulate — never materializes the full
+    # (T*k, d) duplicated-token buffer (k-fold activation blowup)
+    ye_flat = ye.reshape(G, n_experts * capacity, d)
+    slot_tk = slot_id.reshape(G, T, top_k)
+    keep_tk = keep.reshape(G, T, top_k)
+    gate_tk = flat_gate.reshape(G, T, top_k)
+    out = jnp.zeros((G, T, d), xg.dtype)
+    for j in range(top_k):
+        rows = jnp.take_along_axis(ye_flat, slot_tk[:, :, j][..., None],
+                                   axis=1)
+        out = out + jnp.where(keep_tk[:, :, j][..., None],
+                              rows * gate_tk[:, :, j][..., None], 0)
+    return out, aux

@@ -1,0 +1,454 @@
+"""Model composition: init / train-loss / prefill / decode for all families.
+
+Layers are stacked and iterated with `jax.lax.scan` (+ optional remat), so
+HLO size and compile time are O(1) in depth — a hard requirement for the
+88-layer / 61-layer dry-runs.  Heterogeneous structures avoid `lax.cond`
+(which double-counts FLOPs in cost analysis) by construction:
+
+  * MoE `first_k_dense` prefix layers are unrolled before the scanned MoE
+    stack;
+  * the Zamba2 hybrid is scanned as "super-layers" — `attn_every` Mamba2
+    layers followed by one application of the shared attention+MLP block —
+    with the remainder layers unrolled at the tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed import hints
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+def attn_spec(cfg: ArchConfig) -> L.AttnSpec:
+    rope = cfg.rope if cfg.rope in ("rope", "mrope") else "none"
+    return L.AttnSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias, rope=rope,
+        rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections)
+
+
+def _init_attn_block(key, cfg: ArchConfig, *, moe_layer: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jnp_dtype
+    p = {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, dt),
+        "attn": L.init_attention(k1, attn_spec(cfg), dt),
+        "ln2": L.init_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if moe_layer:
+        p["moe"] = MOE.init_moe(k2, cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                                cfg.n_shared_experts, dt)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dt)
+    return p
+
+
+def _init_mamba_block(key, cfg: ArchConfig) -> Params:
+    return {
+        "ln1": L.init_norm(cfg.norm, cfg.d_model, cfg.jnp_dtype),
+        "mamba": M2.init_mamba2(
+            key, cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            d_conv=cfg.ssm_conv, n_groups=cfg.ssm_groups,
+            dtype=cfg.jnp_dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key: Array) -> Params:
+    dt = cfg.jnp_dtype
+    keys = jax.random.split(key, 8)
+    p: Params = {"final_norm": L.init_norm(cfg.norm, cfg.d_model, dt)}
+
+    # embeddings / heads
+    if cfg.family == "audio":
+        p["heads"] = (jax.random.normal(
+            keys[0], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+            jnp.float32) * cfg.d_model ** -0.5).astype(dt)
+    else:
+        p["embed"] = (jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.rope == "learned":
+        p["pos_embed"] = (jax.random.normal(
+            keys[2], (cfg.max_seq_len, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+
+    # layer stacks
+    if cfg.family in ("dense", "audio", "vlm"):
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        p["layers"] = jax.vmap(
+            lambda k: _init_attn_block(k, cfg, moe_layer=False))(lkeys)
+    elif cfg.family == "moe":
+        kd = cfg.first_k_dense
+        if kd:
+            pk = jax.random.split(keys[4], kd)
+            p["prefix"] = [_init_attn_block(pk[i], cfg, moe_layer=False)
+                           for i in range(kd)]
+        lkeys = jax.random.split(keys[3], cfg.n_layers - kd)
+        p["layers"] = jax.vmap(
+            lambda k: _init_attn_block(k, cfg, moe_layer=True))(lkeys)
+    elif cfg.family == "ssm":
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _init_mamba_block(k, cfg))(lkeys)
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers % cfg.attn_every
+        lkeys = jax.random.split(keys[3], n_super * cfg.attn_every)
+        stacked = jax.vmap(lambda k: _init_mamba_block(k, cfg))(lkeys)
+        # (n_super, attn_every, ...) grouping for the super-layer scan
+        p["layers"] = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_every) + a.shape[1:]),
+            stacked)
+        if tail:
+            tk = jax.random.split(keys[5], tail)
+            p["tail"] = jax.vmap(lambda k: _init_mamba_block(k, cfg))(tk)
+        p["shared"] = _init_attn_block(keys[6], cfg, moe_layer=False)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Embedding & logits
+# ----------------------------------------------------------------------------
+
+def embed_inputs(cfg: ArchConfig, p: Params, batch: Dict[str, Array],
+                 *, offset: Array | int = 0) -> Tuple[Array, Array]:
+    """Returns (x (B,S,d), positions).  positions is (B,S) or (3,B,S)."""
+    if cfg.family == "audio":
+        x = batch["frame_embeds"]
+        B, S, _ = x.shape
+        positions = offset + jnp.arange(S)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    elif cfg.family == "vlm":
+        tok = p["embed"][batch["tokens"]]
+        if "image_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["image_embeds"].astype(tok.dtype), tok], axis=1)
+        else:
+            x = tok
+        return x, batch["positions"]
+    else:
+        x = p["embed"][batch["tokens"]]
+        B, S, _ = x.shape
+        positions = offset + jnp.arange(S)[None, :] + jnp.zeros((B, 1), jnp.int32)
+    if cfg.rope == "sinusoidal":
+        x = x + L.sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)
+    elif cfg.rope == "learned":
+        x = x + p["pos_embed"][positions]
+    return x, positions
+
+
+def logits_fn(cfg: ArchConfig, p: Params, x: Array) -> Array:
+    x = L.apply_norm(cfg.norm, p["final_norm"], x)
+    if cfg.family == "audio":
+        return jnp.einsum("bsd,cdv->bscv", x, p["heads"])
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return x @ head
+
+
+# ----------------------------------------------------------------------------
+# Blocks (train / prefill / decode)
+# ----------------------------------------------------------------------------
+
+def _attn_block_train(cfg: ArchConfig, lp: Params, x: Array, positions: Array,
+                      *, moe_layer: bool) -> Tuple[Array, Array]:
+    spec = attn_spec(cfg)
+    x = hints.gathered(x)       # SP: all-gather(seq) once per layer
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    x = x + L.attention_train(lp["attn"], spec, h, positions)
+    h = L.apply_norm(cfg.norm, lp["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if moe_layer:
+        out, aux = MOE.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+    else:
+        out = L.mlp(lp["mlp"], h)
+    return hints.residual(x + out), aux
+
+
+def _attn_block_prefill(cfg, lp, x, positions, *, moe_layer):
+    spec = attn_spec(cfg)
+    x = hints.gathered(x)
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    out, kv = L.attention_prefill(lp["attn"], spec, h, positions)
+    x = x + out
+    h = L.apply_norm(cfg.norm, lp["ln2"], x)
+    if moe_layer:
+        ff, _ = MOE.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+    else:
+        ff = L.mlp(lp["mlp"], h)
+    return x + ff, kv
+
+
+def _attn_block_decode(cfg, lp, x, positions, kv, cache_index, *, moe_layer):
+    spec = attn_spec(cfg)
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    out, kv_new = L.attention_decode(lp["attn"], spec, h, positions, kv,
+                                     cache_index)
+    x = x + out
+    h = L.apply_norm(cfg.norm, lp["ln2"], x)
+    if moe_layer:
+        ff, _ = MOE.moe_ffn(lp["moe"], h, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor)
+    else:
+        ff = L.mlp(lp["mlp"], h)
+    return x + ff, kv_new
+
+
+def _mamba_kwargs(cfg: ArchConfig) -> Dict[str, Any]:
+    return dict(d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, n_groups=cfg.ssm_groups)
+
+
+# ----------------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------------
+
+def forward_train(cfg: ArchConfig, p: Params, batch: Dict[str, Array]
+                  ) -> Tuple[Array, Array]:
+    """Returns (logits, aux_loss)."""
+    x, positions = embed_inputs(cfg, p, batch)
+
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_k_dense:
+            for lp in p["prefix"]:
+                x, _ = _attn_block_train(cfg, lp, x, positions, moe_layer=False)
+        moe_layer = cfg.family == "moe"
+
+        def body(carry, lp):
+            x, aux = carry
+            x = hints.residual(x)          # sequence-parallel saved residual
+            x, a = _attn_block_train(cfg, lp, x, positions,
+                                     moe_layer=moe_layer)
+            return (x, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   p["layers"])
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            x = hints.residual(x)
+            x = hints.gathered(x)
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)
+            return x + M2.mamba2_forward(lp["mamba"], h, **_mamba_kwargs(cfg)), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, p["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        x = _hybrid_train(cfg, p, x, positions)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return logits_fn(cfg, p, x), aux
+
+
+def _hybrid_train(cfg: ArchConfig, p: Params, x: Array, positions: Array
+                  ) -> Array:
+    def mamba_once(x, lp):
+        x = hints.gathered(x)
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        return x + M2.mamba2_forward(lp["mamba"], h, **_mamba_kwargs(cfg)), None
+
+    def super_body(x, group_lp):
+        x = hints.residual(x)
+        x, _ = jax.lax.scan(mamba_once, x, group_lp)
+        x, _ = _attn_block_train(cfg, p["shared"], x, positions,
+                                 moe_layer=False)
+        return x, None
+
+    body_fn = jax.checkpoint(super_body) if cfg.remat else super_body
+    x, _ = jax.lax.scan(body_fn, x, p["layers"])
+    if "tail" in p:
+        x, _ = jax.lax.scan(mamba_once, x, p["tail"])
+    return x
+
+
+def loss_fn(cfg: ArchConfig, p: Params, batch: Dict[str, Array]
+            ) -> Tuple[Array, Dict[str, Array]]:
+    logits, aux = forward_train(cfg, p, batch)
+    if cfg.family == "audio":
+        labels = batch["codes"]                      # (B, S, C)
+        lg = logits.astype(jnp.float32)              # (B, S, C, V)
+        ls = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(ls, labels[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    else:
+        labels = batch["labels"]
+        lg = logits.astype(jnp.float32)
+        ls = jax.nn.log_softmax(lg, axis=-1)
+        mask = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(ls, safe[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, p: Params, batch: Dict[str, Array]
+            ) -> Tuple[Array, Dict[str, Array]]:
+    """Returns (last-position logits, cache dict)."""
+    x, positions = embed_inputs(cfg, p, batch)
+    cache: Dict[str, Array] = {}
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        prefix_kv = []
+        if cfg.family == "moe" and cfg.first_k_dense:
+            for lp in p["prefix"]:
+                x, kv = _attn_block_prefill(cfg, lp, x, positions,
+                                            moe_layer=False)
+                prefix_kv.append(kv)
+        moe_layer = cfg.family == "moe"
+
+        def body(x, lp):
+            x = hints.residual(x)
+            x, kv = _attn_block_prefill(cfg, lp, x, positions,
+                                        moe_layer=moe_layer)
+            return x, kv
+
+        x, kvs = jax.lax.scan(body, x, p["layers"])
+        k, v = kvs
+        if prefix_kv:
+            k = jnp.concatenate([jnp.stack([kv[0] for kv in prefix_kv]), k])
+            v = jnp.concatenate([jnp.stack([kv[1] for kv in prefix_kv]), v])
+        cache = {"k": k, "v": v}
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            x = hints.residual(x)
+            x = hints.gathered(x)
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)
+            y, ssm, conv = M2.mamba2_prefill(lp["mamba"], h,
+                                             **_mamba_kwargs(cfg))
+            return x + y, (ssm, conv)
+
+        x, (ssm, conv) = jax.lax.scan(body, x, p["layers"])
+        cache = {"ssm": ssm, "conv": conv}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_prefill(cfg, p, x, positions)
+    logits = logits_fn(cfg, p, x[:, -1:, :])
+    return logits, cache
+
+
+def _hybrid_prefill(cfg, p, x, positions):
+    def mamba_once(x, lp):
+        x = hints.gathered(x)
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        y, ssm, conv = M2.mamba2_prefill(lp["mamba"], h, **_mamba_kwargs(cfg))
+        return x + y, (ssm, conv)
+
+    def super_body(x, group_lp):
+        x, states = jax.lax.scan(mamba_once, x, group_lp)
+        x, kv = _attn_block_prefill(cfg, p["shared"], x, positions,
+                                    moe_layer=False)
+        return x, (states, kv)
+
+    x, (states, kvs) = jax.lax.scan(super_body, x, p["layers"])
+    ssm = states[0].reshape((-1,) + states[0].shape[2:])
+    conv = states[1].reshape((-1,) + states[1].shape[2:])
+    if "tail" in p:
+        x, (ssm_t, conv_t) = jax.lax.scan(mamba_once, x, p["tail"])
+        ssm = jnp.concatenate([ssm, ssm_t])
+        conv = jnp.concatenate([conv, conv_t])
+    return x, {"ssm": ssm, "conv": conv, "k": kvs[0], "v": kvs[1]}
+
+
+def decode_step(cfg: ArchConfig, p: Params, batch: Dict[str, Array]
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token serve step.  batch: tokens/frame_embeds (B,1), cache,
+    cache_index.  Returns (logits (B,1,V...), updated cache)."""
+    cache = batch["cache"]
+    idx = batch["cache_index"]
+    x, positions = embed_inputs(cfg, p, batch, offset=idx)
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        moe_layer = cfg.family == "moe"
+        kd = cfg.first_k_dense if cfg.family == "moe" else 0
+        k, v = cache["k"], cache["v"]
+        new_k, new_v = k, v
+        for i in range(kd):
+            kv_i = (k[i], v[i])
+            x, kv_n = _attn_block_decode(cfg, p["prefix"][i], x, positions,
+                                         kv_i, idx, moe_layer=False)
+            new_k = new_k.at[i].set(kv_n[0])
+            new_v = new_v.at[i].set(kv_n[1])
+
+        def body(x, inp):
+            lp, kc, vc = inp
+            x, kv_n = _attn_block_decode(cfg, lp, x, positions, (kc, vc),
+                                         idx, moe_layer=moe_layer)
+            return x, kv_n
+
+        x, (ks, vs) = jax.lax.scan(body, x, (p["layers"], k[kd:], v[kd:]))
+        new_k = new_k.at[kd:].set(ks) if kd else ks
+        new_v = new_v.at[kd:].set(vs) if kd else vs
+        new_cache = {"k": new_k, "v": new_v}
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            lp, ssm, conv = inp
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)
+            y, ssm2, conv2 = M2.mamba2_decode(lp["mamba"], h, ssm, conv,
+                                              **_mamba_kwargs(cfg))
+            return x + y, (ssm2, conv2)
+
+        x, (ssm, conv) = jax.lax.scan(body, x,
+                                      (p["layers"], cache["ssm"], cache["conv"]))
+        new_cache = {"ssm": ssm, "conv": conv}
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(cfg, p, x, positions, cache, idx)
+    else:
+        raise ValueError(cfg.family)
+    new_cache["index"] = idx + 1
+    return logits_fn(cfg, p, x), new_cache
+
+
+def _hybrid_decode(cfg, p, x, positions, cache, idx):
+    n_super = cfg.n_layers // cfg.attn_every
+    per = cfg.attn_every
+    ssm = cache["ssm"]
+    conv = cache["conv"]
+    ssm_g = ssm[: n_super * per].reshape((n_super, per) + ssm.shape[1:])
+    conv_g = conv[: n_super * per].reshape((n_super, per) + conv.shape[1:])
+
+    def mamba_once(x, inp):
+        lp, s, c = inp
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        y, s2, c2 = M2.mamba2_decode(lp["mamba"], h, s, c, **_mamba_kwargs(cfg))
+        return x + y, (s2, c2)
+
+    def super_body(x, inp):
+        group_lp, s_g, c_g, kc, vc = inp
+        x, (s2, c2) = jax.lax.scan(mamba_once, x, (group_lp, s_g, c_g))
+        x, kv_n = _attn_block_decode(cfg, p["shared"], x, positions,
+                                     (kc, vc), idx, moe_layer=False)
+        return x, (s2, c2, kv_n[0], kv_n[1])
+
+    x, (s2, c2, ks, vs) = jax.lax.scan(
+        super_body, x, (p["layers"], ssm_g, conv_g, cache["k"], cache["v"]))
+    new_ssm = s2.reshape((-1,) + s2.shape[2:])
+    new_conv = c2.reshape((-1,) + c2.shape[2:])
+    if "tail" in p:
+        x, (st, ct) = jax.lax.scan(
+            mamba_once, x,
+            (p["tail"], ssm[n_super * per:], conv[n_super * per:]))
+        new_ssm = jnp.concatenate([new_ssm, st])
+        new_conv = jnp.concatenate([new_conv, ct])
+    return x, {"ssm": new_ssm, "conv": new_conv, "k": ks, "v": vs}

@@ -1,0 +1,151 @@
+"""Optimizers: AdamW (ZeRO-1-shardable moments) and Adafactor.
+
+AdamW keeps f32 first/second moments; under ZeRO-1 the moments (and the
+gradient reduction) are sharded across the `data`(+`pod`) mesh axes on top of
+the params' TP sharding (see distributed/sharding.py — GSPMD realizes the
+reduce-scatter).  Adafactor stores factored second moments (row/col sums) —
+the choice for the 1T-param config, where full AdamW moments cannot fit 512
+chips (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: Array) -> Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(cfg: OptConfig, params: Params) -> Dict[str, Any]:
+    if cfg.kind == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "adafactor":
+        def facs(p):
+            if p.ndim < 2:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"fac": jax.tree.map(facs, params,
+                                    is_leaf=lambda x: isinstance(x, jax.Array)),
+                "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def global_norm(tree: Params) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Tuple[Params, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+_CHUNK_THRESHOLD = 1 << 30     # elements; ~2 GB bf16 / 4 GB f32
+
+
+def _maybe_chunked(fn, *leaves):
+    """Apply an elementwise-leaf update; giant stacked leaves (e.g. the
+    (layers, experts, d, ff) MoE stack — 1T params) are processed slice-by-
+    slice over the leading dim so the f32 temporaries are per-layer-sized
+    instead of a full f32 copy of the tensor (which alone would blow the HBM
+    budget on the 1T config)."""
+    p = leaves[0]
+    if p.ndim >= 3 and p.size >= _CHUNK_THRESHOLD:
+        return jax.lax.map(lambda args: fn(*args), leaves)
+    return fn(*leaves)
+
+
+def apply_updates(cfg: OptConfig, params: Params, grads: Params,
+                  state: Dict[str, Any]) -> Tuple[Params, Dict[str, Any], Dict[str, Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    if cfg.kind == "adamw":
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu2 = cfg.b1 * mu + (1 - cfg.b1) * g32
+            nu2 = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+            d = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + cfg.eps)
+            if p.ndim >= 2:
+                d = d + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), mu2, nu2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [_maybe_chunked(upd, p, g, m, n) for p, g, m, n
+               in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                     "nu": tdef.unflatten([o[2] for o in out]),
+                     "step": step}
+        return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    # -- adafactor (beta1=0, factored second moment) --------------------------
+    d2 = 1e-30
+
+    def upd_fac(p, g, fac):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + d2
+        if p.ndim < 2:
+            v = cfg.b2 * fac["v"] + (1 - cfg.b2) * g2
+            d = g32 * jax.lax.rsqrt(v + cfg.eps)
+            new_fac = {"v": v}
+        else:
+            vr = cfg.b2 * fac["vr"] + (1 - cfg.b2) * g2.mean(axis=-1)
+            vc = cfg.b2 * fac["vc"] + (1 - cfg.b2) * g2.mean(axis=-2)
+            rfac = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), d2)
+            d = g32 * jax.lax.rsqrt(rfac[..., None] * vc[..., None, :] + cfg.eps)
+            new_fac = {"vr": vr, "vc": vc}
+        # update clipping (adafactor RMS trick)
+        rms = jnp.sqrt(jnp.mean(jnp.square(d)) + d2)
+        d = d / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            d = d + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype), new_fac
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_f = tdef.flatten_up_to(state["fac"])
+    out = [_maybe_chunked(upd_fac, p, g, f)
+           for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = {"fac": tdef.unflatten([o[1] for o in out]), "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

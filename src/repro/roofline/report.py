@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(results_dir: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/1e9:.2f}"
+
+
+def table(recs: List[Dict], mesh_kind: str) -> str:
+    rows = []
+    header = ("| arch | shape | kind | compute s | memory s | coll s | "
+              "dominant | useful | mem GB/dev | MFU-UB |\n"
+              "|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("mesh_kind") != mesh_kind:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r.get('arch','?')} | {r.get('shape','?')} | — | "
+                        f"SKIP | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r.get('arch','?')} | {r.get('shape','?')} | — | "
+                        f"ERROR | | | | | | |")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"].get("total_bytes_per_device", 0) / 1e9
+        mfu = r.get("mfu_upper_bound", 0.0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['dominant']}** "
+            f"| {rl['useful_ratio']:.2f} | {mem:.1f} "
+            f"| {mfu:.3f} |")
+    return header + "\n" + "\n".join(sorted(rows))
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r["status"] == "ok"]
+    err = [r for r in recs if r["status"] == "error"]
+    skip = [r for r in recs if r["status"] == "skipped"]
+    lines = [f"- cells: {len(recs)} total, {len(ok)} compiled ok, "
+             f"{len(skip)} documented skips, {len(err)} errors"]
+    by_dom: Dict[str, int] = {}
+    for r in ok:
+        d = r["roofline"]["dominant"]
+        by_dom[d] = by_dom.get(d, 0) + 1
+    lines.append(f"- dominant bottleneck distribution: {by_dom}")
+    worst = sorted(ok, key=lambda r: -(r.get("mfu_upper_bound") or 0))
+    if worst:
+        best = worst[0]
+        lines.append(
+            f"- best MFU upper bound: {best['arch']}/{best['shape']} "
+            f"@ {best['mfu_upper_bound']:.3f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Summary\n")
+    print(summary(recs))
+    for mk in ("pod", "multipod"):
+        print(f"\n## {mk} mesh\n")
+        print(table(recs, mk))
+
+
+if __name__ == "__main__":
+    main()

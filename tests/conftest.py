@@ -1,0 +1,30 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — tests run on the single real device; only
+# launch/dryrun.py forces 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_problem():
+    from repro.data.dmri import synth_connectome
+    return synth_connectome(n_fibers=64, n_theta=16, n_atoms=24,
+                            grid=(10, 10, 10), seed=1)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense(tiny_problem):
+    from repro.core.std import materialize_dense
+    return materialize_dense(tiny_problem.phi, tiny_problem.dictionary)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

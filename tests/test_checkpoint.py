@@ -1,0 +1,72 @@
+"""Checkpointing: roundtrip, atomicity, retention, reshard-on-load."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as CK
+
+
+def _tree(rng):
+    return {"params": {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+                       "layers": {"scale": jnp.ones((3,), jnp.bfloat16)}},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path, rng):
+    tree = _tree(rng)
+    CK.save(str(tmp_path), 7, tree, meta={"arch": "test"})
+    step, flat, manifest = CK.restore(str(tmp_path))
+    assert step == 7 and manifest["arch"] == "test"
+    rebuilt = CK.unflatten_like(jax.eval_shape(lambda: tree), flat)
+    np.testing.assert_array_equal(rebuilt["params"]["w"],
+                                  np.asarray(tree["params"]["w"]))
+    assert rebuilt["params"]["layers"]["scale"].dtype == np.asarray(
+        tree["params"]["layers"]["scale"]).dtype
+
+
+def test_retention_and_latest(tmp_path, rng):
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4, 5):
+        CK.save(str(tmp_path), s, tree, keep=3)
+    assert CK.all_steps(str(tmp_path)) == [3, 4, 5]
+    assert CK.latest_step(str(tmp_path)) == 5
+
+
+def test_no_tmp_dirs_left(tmp_path, rng):
+    CK.save(str(tmp_path), 1, _tree(rng))
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_shape_mismatch_detected(tmp_path, rng):
+    CK.save(str(tmp_path), 1, _tree(rng))
+    _, flat, _ = CK.restore(str(tmp_path))
+    bad_template = {"params": {"w": jax.ShapeDtypeStruct((5, 8), jnp.float32),
+                               "layers": {"scale": jax.ShapeDtypeStruct(
+                                   (3,), jnp.bfloat16)}},
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError, match="shape"):
+        CK.unflatten_like(bad_template, flat)
+
+
+def test_missing_key_detected(tmp_path, rng):
+    CK.save(str(tmp_path), 1, _tree(rng))
+    _, flat, _ = CK.restore(str(tmp_path))
+    template = {"params": {"extra": jax.ShapeDtypeStruct((1,), jnp.float32)}}
+    with pytest.raises(KeyError):
+        CK.unflatten_like(template, flat)
+
+
+def test_place_under_sharding(tmp_path, rng):
+    """Reshard-on-load path (single device: identity sharding)."""
+    tree = _tree(rng)
+    CK.save(str(tmp_path), 2, tree)
+    _, flat, _ = CK.restore(str(tmp_path))
+    rebuilt = CK.unflatten_like(jax.eval_shape(lambda: tree), flat)
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), rebuilt)
+    placed = CK.place(rebuilt, shardings)
+    np.testing.assert_array_equal(np.asarray(placed["params"]["w"]),
+                                  flat["params/w"])

@@ -1,0 +1,75 @@
+"""Mamba2 SSD: chunked scan vs sequential recurrence, decode continuity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.mamba2 import (init_mamba2, mamba2_decode, mamba2_prefill,
+                                 ssd_chunked)
+
+
+def _oracle(x, dt, a, b, c):
+    """Sequential SSD recurrence in numpy."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = np.repeat(np.asarray(b), rep, axis=2)
+    ch = np.repeat(np.asarray(c), rep, axis=2)
+    h = np.zeros((B, H, P, N))
+    ys = np.zeros((B, S, H, P))
+    for t in range(S):
+        decay = np.exp(np.asarray(dt)[:, t] * np.asarray(a)[None, :])
+        h = h * decay[..., None, None] + np.einsum(
+            "bh,bhp,bhn->bhpn", np.asarray(dt)[:, t], np.asarray(x)[:, t],
+            bh[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", h, ch[:, t])
+    return ys, h
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+@pytest.mark.parametrize("G", [1, 2])
+def test_ssd_chunked_matches_recurrence(rng, chunk, G):
+    B, S, H, P, N = 2, 32, 4, 8, 6
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, S, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    ys, h = _oracle(x, dt, a, b, c)
+    y, hl = ssd_chunked(x, dt, a, b, c, chunk)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hl), h, rtol=3e-4, atol=3e-4)
+
+
+def test_prefill_then_decode_matches_full(rng):
+    d_model, d_state, hd = 16, 6, 4
+    kw = dict(d_state=d_state, head_dim=hd, expand=2)
+    p = init_mamba2(jax.random.PRNGKey(0), d_model, d_state=d_state,
+                    head_dim=hd, expand=2, dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 12, d_model)), jnp.float32)
+    y_full, h_full, cs_full = mamba2_prefill(p, x, chunk=4, **kw)
+    y_pre, h, cs = mamba2_prefill(p, x[:, :8], chunk=4, **kw)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :8]),
+                               rtol=1e-4, atol=1e-4)
+    for t in range(8, 12):
+        y_t, h, cs = mamba2_decode(p, x[:, t:t + 1], h, cs, **kw)
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(y_full[:, t]),
+                                   rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(cs_full),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_bf16_output_dtype_stable(rng):
+    """Regression: d_skip/f32 internals must not promote the layer output
+    (broke the scanned-carry dtype on the full bf16 configs)."""
+    p = init_mamba2(jax.random.PRNGKey(0), 16, d_state=4, head_dim=4,
+                    expand=2, dtype=jnp.bfloat16)
+    x = jnp.asarray(rng.normal(size=(1, 8, 16)), jnp.bfloat16)
+    y, h, cs = mamba2_prefill(p, x, d_state=4, head_dim=4, expand=2, chunk=4)
+    assert y.dtype == jnp.bfloat16
+    y2, h2, cs2 = mamba2_decode(p, x[:, :1], h, cs, d_state=4, head_dim=4,
+                                expand=2)
+    assert y2.dtype == jnp.bfloat16

@@ -1,0 +1,100 @@
+"""SBBNNLS solver: convergence, invariants, reference agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.life import LifeEngine, LifeConfig
+from repro.core.sbbnnls import projected_gradient, sbbnnls_run
+from repro.core.std import materialize_dense
+
+
+def _numpy_sbbnnls(m, b, w0, n_iters):
+    """Independent numpy reference of Algorithm 1."""
+    w = w0.copy()
+    losses = []
+    for it in range(n_iters):
+        y = m @ w - b
+        g = m.T @ y
+        gt = np.where((w > 0) | (g < 0), g, 0.0)
+        v = m @ gt
+        if it % 2 == 1:
+            den = float(v @ v)
+            alpha = float(gt @ gt) / den if den > 0 else 0.0
+        else:
+            vv = m.T @ v
+            vv = np.where((w > 0) | (vv < 0), vv, 0.0)
+            den = float(vv @ vv)
+            alpha = float(v @ v) / den if den > 0 else 0.0
+        w = np.maximum(w - alpha * gt, 0.0)
+        losses.append(0.5 * float(y @ y))
+    return w, losses
+
+
+def test_matches_numpy_reference(tiny_problem, tiny_dense):
+    p = tiny_problem
+    m = np.asarray(tiny_dense, np.float64)
+    b = np.asarray(p.b, np.float64).reshape(-1)
+    w0 = np.ones(p.phi.n_fibers)
+    w_ref, losses_ref = _numpy_sbbnnls(m, b, w0, 10)
+
+    eng = LifeEngine(p, LifeConfig(executor="opt", n_iters=10))
+    w_jax, losses_jax = eng.run()
+    np.testing.assert_allclose(losses_jax, losses_ref, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(w_jax), w_ref, rtol=2e-2, atol=2e-3)
+
+
+def test_loss_decreases_and_nonneg(tiny_problem):
+    eng = LifeEngine(tiny_problem, LifeConfig(executor="opt", n_iters=40))
+    w, losses = eng.run()
+    assert losses[-1] < losses[0] * 0.05
+    assert float(np.asarray(w).min()) >= 0.0          # NNLS invariant
+    assert np.isfinite(losses).all()
+
+
+def test_executors_agree(tiny_problem):
+    results = {}
+    for ex in ("naive", "opt", "opt-paper", "kernel"):
+        cfg = LifeConfig(executor=ex, n_iters=8, c_tile=64, row_tile=8)
+        w, losses = LifeEngine(tiny_problem, cfg).run()
+        results[ex] = (np.asarray(w), losses)
+    base_w, base_l = results["naive"]
+    for ex, (w, l) in results.items():
+        np.testing.assert_allclose(l, base_l, rtol=2e-3, err_msg=ex)
+        np.testing.assert_allclose(w, base_w, rtol=2e-2, atol=2e-3,
+                                   err_msg=ex)
+
+
+def test_weight_compaction_keeps_solution(tiny_problem):
+    ref = LifeEngine(tiny_problem, LifeConfig(executor="opt", n_iters=30))
+    w_ref, _ = ref.run()
+    eng = LifeEngine(tiny_problem,
+                     LifeConfig(executor="opt", n_iters=30, compact_every=10))
+    w, losses = eng.run()
+    assert eng.phi.n_coeffs <= tiny_problem.phi.n_coeffs
+    # pruning result is preserved (zero-weight fibers dropped were inert)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_recovers_ground_truth_support(tiny_problem):
+    eng = LifeEngine(tiny_problem, LifeConfig(executor="opt", n_iters=60))
+    w, _ = eng.run()
+    stats = eng.prune_stats(w)
+    assert stats["recall"] > 0.9          # active fibers retained
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_projected_gradient(seed):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(np.maximum(r.normal(size=50), 0), jnp.float32)
+    g = jnp.asarray(r.normal(size=50), jnp.float32)
+    gt = np.asarray(projected_gradient(w, g))
+    w_np, g_np = np.asarray(w), np.asarray(g)
+    # frozen exactly where w==0 and g>0
+    frozen = (w_np == 0) & (g_np > 0)
+    assert (gt[frozen] == 0).all()
+    assert np.allclose(gt[~frozen], g_np[~frozen])
+    # one projected step never leaves the nonneg orthant
+    assert float(jnp.maximum(w - 0.1 * gt, 0.0).min()) >= 0

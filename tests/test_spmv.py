@@ -1,0 +1,119 @@
+"""SpMV executors vs the dense oracle + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spmv
+from repro.core.restructure import sort_by_host
+from repro.core.std import PhiTensor, make_dictionary, materialize_dense
+
+
+def _rand_w(rng, n):
+    return jnp.asarray(rng.uniform(size=n), jnp.float32)
+
+
+def _rand_y(rng, nv, nt):
+    return jnp.asarray(rng.normal(size=(nv, nt)), jnp.float32)
+
+
+def test_dsc_naive_matches_dense(tiny_problem, tiny_dense, rng):
+    w = _rand_w(rng, tiny_problem.phi.n_fibers)
+    got = spmv.dsc_naive(tiny_problem.phi, tiny_problem.dictionary, w)
+    want = (tiny_dense @ w).reshape(tiny_problem.phi.n_voxels, -1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_wc_naive_matches_dense(tiny_problem, tiny_dense, rng):
+    y = _rand_y(rng, tiny_problem.phi.n_voxels, 16)
+    got = spmv.wc_naive(tiny_problem.phi, tiny_problem.dictionary, y)
+    want = tiny_dense.T @ y.reshape(-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dim,fn", [
+    ("voxel", spmv.dsc), ("atom", spmv.dsc_atom_sorted)])
+def test_dsc_restructured_matches_naive(tiny_problem, rng, dim, fn):
+    w = _rand_w(rng, tiny_problem.phi.n_fibers)
+    phi_s, _ = sort_by_host(tiny_problem.phi, dim)
+    got = fn(phi_s, tiny_problem.dictionary, w)
+    want = spmv.dsc_naive(tiny_problem.phi, tiny_problem.dictionary, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dim,fn", [
+    ("fiber", spmv.wc), ("atom", spmv.wc_atom_sorted)])
+def test_wc_restructured_matches_naive(tiny_problem, rng, dim, fn):
+    y = _rand_y(rng, tiny_problem.phi.n_voxels, 16)
+    phi_s, _ = sort_by_host(tiny_problem.phi, dim)
+    got = fn(phi_s, tiny_problem.dictionary, y)
+    want = spmv.wc_naive(tiny_problem.phi, tiny_problem.dictionary, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# Property tests: random COO tensors
+# ----------------------------------------------------------------------------
+
+@st.composite
+def coo(draw):
+    nc = draw(st.integers(1, 200))
+    na = draw(st.integers(1, 8))
+    nv = draw(st.integers(1, 30))
+    nf = draw(st.integers(1, 20))
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = np.random.default_rng(seed)
+    return PhiTensor(
+        atoms=jnp.asarray(r.integers(0, na, nc), jnp.int32),
+        voxels=jnp.asarray(r.integers(0, nv, nc), jnp.int32),
+        fibers=jnp.asarray(r.integers(0, nf, nc), jnp.int32),
+        values=jnp.asarray(r.normal(size=nc), jnp.float32),
+        n_atoms=na, n_voxels=nv, n_fibers=nf), seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(coo())
+def test_property_dsc_equals_dense(case):
+    phi, seed = case
+    r = np.random.default_rng(seed + 1)
+    d = make_dictionary(phi.n_atoms, 8)
+    w = jnp.asarray(r.uniform(size=phi.n_fibers), jnp.float32)
+    m = materialize_dense(phi, d)
+    got = spmv.dsc_naive(phi, d, w)
+    want = (m @ w).reshape(phi.n_voxels, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(coo())
+def test_property_wc_adjoint_of_dsc(case):
+    """<Mw, y> == <w, M^T y>: DSC and WC are exact adjoints."""
+    phi, seed = case
+    r = np.random.default_rng(seed + 2)
+    d = make_dictionary(phi.n_atoms, 8)
+    w = jnp.asarray(r.normal(size=phi.n_fibers), jnp.float32)
+    y = jnp.asarray(r.normal(size=(phi.n_voxels, 8)), jnp.float32)
+    lhs = jnp.vdot(spmv.dsc_naive(phi, d, w), y)
+    rhs = jnp.vdot(w, spmv.wc_naive(phi, d, y))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(coo())
+def test_property_sort_invariance(case):
+    """Restructuring (any sort) never changes either SpMV result."""
+    phi, seed = case
+    r = np.random.default_rng(seed + 3)
+    d = make_dictionary(phi.n_atoms, 8)
+    w = jnp.asarray(r.uniform(size=phi.n_fibers), jnp.float32)
+    base = spmv.dsc_naive(phi, d, w)
+    for dim in ("atom", "voxel", "fiber"):
+        phi_s, _ = sort_by_host(phi, dim)
+        np.testing.assert_allclose(
+            np.asarray(spmv.dsc_naive(phi_s, d, w)), np.asarray(base),
+            rtol=1e-4, atol=1e-5)
