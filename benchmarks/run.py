@@ -9,7 +9,7 @@ import time
 from benchmarks import (table2_restructuring, table3_partitioning,
                         table4_opt_combos, table5_scaling,
                         table8_kernel_ladder, table9_param_sweep,
-                        table10_end2end)
+                        table10_end2end, table11_batched)
 
 TABLES = {
     "table2": table2_restructuring,
@@ -19,6 +19,7 @@ TABLES = {
     "table8": table8_kernel_ladder,   # covers paper tables 6-8
     "table9": table9_param_sweep,
     "table10": table10_end2end,
+    "table11": table11_batched,       # beyond-paper: multi-subject batching
 }
 
 

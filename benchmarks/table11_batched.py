@@ -1,0 +1,69 @@
+"""Beyond-paper: multi-subject batched LiFE throughput (subjects/sec).
+
+Compares serving a cohort sequentially (one LifeEngine per subject, the
+pre-batching deployment model) against one BatchedLifeEngine running the
+vmapped SBBNNLS for the whole cohort.  The derived column reports
+subjects/sec and the batched speedup; the last row reports the plan-cache
+effect on construction (second engine build on the same dataset).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.batched import BatchedLifeEngine
+from repro.core.life import LifeConfig, LifeEngine
+from repro.data.dmri import synth_cohort
+
+N_ITERS = 30
+
+
+def _bench(fn, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall seconds of fn() (fn blocks internally)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run():
+    cohort = synth_cohort(8, base_seed=40, n_fibers=256, n_theta=64,
+                          n_atoms=64, grid=(14, 14, 14))
+    cfg = LifeConfig(executor="opt", n_iters=N_ITERS, plan_cache_dir="")
+
+    for s in (1, 2, 4, 8):
+        subjects = cohort[:s]
+
+        engines = [LifeEngine(p, cfg) for p in subjects]
+        t_seq = _bench(lambda: [e.run() for e in engines])
+        emit(f"table11.sequential.s{s}", t_seq * 1e6 / s,
+             f"{s / t_seq:.2f}subj/s")
+
+        beng = BatchedLifeEngine(subjects, cfg)
+        t_bat = _bench(lambda: beng.run())
+        emit(f"table11.batched.s{s}", t_bat * 1e6 / s,
+             f"{s / t_bat:.2f}subj/s;speedup={t_seq / t_bat:.2f}x")
+
+    # plan-cache amortization: kernel-engine construction, cold vs warm
+    import tempfile
+    kcfg = LifeConfig(executor="kernel", n_iters=N_ITERS, c_tile=128,
+                      row_tile=8, plan_cache_dir=tempfile.mkdtemp())
+    t0 = time.perf_counter()
+    cold = LifeEngine(cohort[0], kcfg)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = LifeEngine(cohort[0], kcfg)
+    t_warm = time.perf_counter() - t0
+    emit("table11.plancache.cold", t_cold * 1e6,
+         f"misses={cold.cache_stats.misses}")
+    emit("table11.plancache.warm", t_warm * 1e6,
+         f"hits={warm.cache_stats.hits};speedup={t_cold / max(t_warm, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

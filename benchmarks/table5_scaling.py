@@ -26,8 +26,8 @@ from repro.distributed import life_shard as LS
 p = synth_connectome(n_fibers=1024, n_theta=96, n_atoms=96,
                      grid=(20, 20, 20), algorithm="PROB", seed=5)
 R, C = {rc}
-mesh = jax.make_mesh((R, C), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro import compat
+mesh = compat.make_mesh((R, C), ("data", "model"))
 shards = LS.build_life_shards(p.phi, 96, R=R, C=C)
 step = LS.make_sharded_step(mesh, dict(nv_local=shards.nv_local,
                                        nf_local=shards.nf_local, n_theta=96))

@@ -1,0 +1,74 @@
+"""Serve a multi-subject cohort through the batched LiFE engine.
+
+    PYTHONPATH=src python examples/serve_subjects.py [n_subjects]
+
+The production-scale deployment story: many subjects arrive sharing one
+acquisition protocol (same gradient scheme -> same dictionary, same candidate
+fiber count).  Instead of running SBBNNLS once per subject, the batched
+engine pads every subject's Phi tensor to a common coefficient count and
+solves the whole cohort in one vmapped computation — reporting throughput in
+subjects/sec.  A persistent plan cache makes re-serving the same dataset
+(new process, same data) skip the inspector work entirely.
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.batched import BatchedLifeEngine
+from repro.core.life import LifeConfig, LifeEngine
+from repro.data.dmri import synth_cohort
+
+
+def main():
+    try:
+        n_subjects = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    except ValueError:
+        sys.exit(f"usage: {sys.argv[0]} [n_subjects]")
+    print(f"1. synthesizing {n_subjects}-subject cohort "
+          "(shared acquisition, per-subject anatomy)...")
+    cohort = synth_cohort(n_subjects, base_seed=0, n_fibers=256, n_theta=64,
+                          n_atoms=64, grid=(14, 14, 14))
+    ncs = [p.phi.n_coeffs for p in cohort]
+    print(f"   Nc per subject: {ncs} (padded to {max(ncs)})")
+
+    cfg = LifeConfig(executor="opt", n_iters=60,
+                     plan_cache_dir=tempfile.mkdtemp())
+
+    print("2. baseline: sequential per-subject engines...")
+    engines = [LifeEngine(p, cfg) for p in cohort]
+    for e in engines:
+        e.run(n_iters=2)                      # warm the compile caches
+    t0 = time.perf_counter()
+    seq = [e.run() for e in engines]
+    t_seq = time.perf_counter() - t0
+    print(f"   {n_subjects / t_seq:.2f} subjects/sec sequential")
+
+    print("3. batched engine: one vmapped SBBNNLS for the cohort...")
+    beng = BatchedLifeEngine(cohort, cfg)
+    beng.run(n_iters=2)                       # warm the compile cache
+    t0 = time.perf_counter()
+    W, losses = beng.run()
+    t_bat = time.perf_counter() - t0
+    print(f"   {n_subjects / t_bat:.2f} subjects/sec batched "
+          f"({t_seq / t_bat:.2f}x vs sequential)")
+
+    for s, (w_seq, _) in enumerate(seq):
+        np.testing.assert_allclose(np.asarray(W[s]), np.asarray(w_seq),
+                                   rtol=1e-4, atol=1e-5)
+    print("   batched weights match the per-subject runs")
+
+    print("4. per-subject pruning results:")
+    for s, stats in enumerate(beng.prune_stats(W)):
+        print(f"   subject {s}: kept {int(stats['kept'])}/"
+              f"{int(stats['total'])} fibers | precision "
+              f"{stats['precision']:.2f} recall {stats['recall']:.2f} "
+              f"| final loss {losses[s, -1]:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""jax version compatibility shims (single place, imported everywhere).
+
+The repo targets the newest jax API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, list-free ``cost_analysis``) but must run on the
+pinned container version as well.  Every call site goes through this module
+instead of feature-testing jax inline.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def auto_axis_types(n: int):
+    """(AxisType.Auto,) * n on jax versions that have explicit-sharding
+    modes; None (omit the kwarg) on versions that predate AxisType."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """jax.make_mesh with Auto axis types when the kwarg exists."""
+    types = auto_axis_types(len(axis_names))
+    if types is None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    return jax.make_mesh(tuple(shape), tuple(axis_names), axis_types=types)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Replication-check-free shard_map across the API renames:
+    jax.shard_map(check_vma=) > jax.shard_map(check_rep=) >
+    jax.experimental.shard_map.shard_map(check_rep=)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kwargs in ({"check_vma": False}, {"check_rep": False}, {}):
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+        except TypeError:
+            continue
+    raise RuntimeError("no compatible shard_map signature found")
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize Compiled.cost_analysis(): older jax returns a one-element
+    list of per-partition dicts, newer returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)

@@ -1,0 +1,206 @@
+"""Batched multi-subject LiFE: one vmapped SBBNNLS over a subject cohort.
+
+Production LiFE serves many subjects against one shared diffusion dictionary
+(the canonical atoms depend on the gradient scheme, not the subject).  Per
+subject the workload is identical in *structure* — same Nv voxel grid, same
+Nf candidate fibers, same Ntheta directions — but each Phi tensor has its own
+coefficient count Nc_s.  This engine:
+
+  1. restructures every subject's Phi per the chosen executor (the same
+     per-op sorts :mod:`repro.core.registry` applies for one subject),
+  2. pads each subject's coefficient arrays to the cohort max Nc with inert
+     dummy slots — value 0 so padding contributes nothing through either
+     SpMV, and sort-key index = (dim size - 1) so the padded tail preserves
+     the sortedness the segment-sum executors rely on (the same dummy-slot
+     idiom as ``kernels/ops.py:_padded_operands``),
+  3. stacks the cohort into (S, Nc_max) operands and runs SBBNNLS for all
+     subjects at once: one ``lax.scan`` whose body is the vmapped solver
+     step, so the per-iteration Barzilai-Borwein step size stays
+     *per-subject* while every SpMV becomes one batched device computation.
+
+Batching composes with the plan cache: the "auto" path autotunes once (on
+the first subject, through the persistent cache) and applies the measured
+sort choice cohort-wide.  Executors whose operands are per-subject static
+shapes (``kernel`` tile plans, ``shard`` mesh layouts) are rejected —
+:class:`~repro.core.registry.Executor.vmappable` records which factories
+admit stacking.  See DESIGN.md §6.2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv
+from repro.core.plan_cache import PlanCache
+from repro.core.registry import _DSC_FNS, _WC_FNS, REGISTRY
+from repro.core.restructure import sort_by_host
+from repro.core.sbbnnls import SbbnnlsState, sbbnnls_step
+from repro.core.std import PhiTensor
+from repro.data.dmri import LifeProblem
+
+# executor name -> (dsc sort dim or None, wc sort dim or None, dsc fn, wc fn)
+_BATCH_RECIPES = {
+    "naive": (None, None, spmv.dsc_naive, spmv.wc_naive),
+    "opt": ("voxel", "fiber", spmv.dsc, spmv.wc),
+    "opt-paper": ("voxel", "atom", spmv.dsc, spmv.wc_atom_sorted),
+}
+
+# dims whose executor consumes a *sorted* segment reduction; padding must
+# extend the sort key monotonically for these
+_SEGMENT_SORTED = {(spmv.dsc, "voxel"), (spmv.wc, "fiber")}
+
+
+def _pad_sorted(phi: PhiTensor, nc_max: int, sort_dim: Optional[str],
+                keep_sorted: bool) -> PhiTensor:
+    """Pad a (possibly sorted) PhiTensor to nc_max inert dummy coefficients."""
+    pad = nc_max - phi.n_coeffs
+    if pad == 0:
+        return phi
+    dim_last = {"atom": phi.n_atoms - 1, "voxel": phi.n_voxels - 1,
+                "fiber": phi.n_fibers - 1}
+
+    def pad_idx(arr, dim):
+        fill = dim_last[dim] if (keep_sorted and dim == sort_dim) else 0
+        return jnp.concatenate(
+            [arr, jnp.full((pad,), fill, arr.dtype)])
+
+    return dataclasses.replace(
+        phi,
+        atoms=pad_idx(phi.atoms, "atom"),
+        voxels=pad_idx(phi.voxels, "voxel"),
+        fibers=pad_idx(phi.fibers, "fiber"),
+        values=jnp.concatenate(
+            [phi.values, jnp.zeros((pad,), phi.values.dtype)]))
+
+
+def _stack_phis(phis: Sequence[PhiTensor]) -> PhiTensor:
+    return dataclasses.replace(
+        phis[0],
+        atoms=jnp.stack([p.atoms for p in phis]),
+        voxels=jnp.stack([p.voxels for p in phis]),
+        fibers=jnp.stack([p.fibers for p in phis]),
+        values=jnp.stack([p.values for p in phis]))
+
+
+class BatchedLifeEngine:
+    """Runs SBBNNLS for a cohort of subjects in one vmapped computation.
+
+    All subjects must share the dictionary shape and the (Nv, Nf) problem
+    geometry; coefficient counts may differ (padded to the cohort max).
+    """
+
+    def __init__(self, problems: Sequence[LifeProblem], config,
+                 cache: Optional[PlanCache] = None):
+        if not problems:
+            raise ValueError("need at least one subject")
+        self.problems = list(problems)
+        self.config = config
+        self.cache = cache if cache is not None else PlanCache(
+            getattr(config, "plan_cache_dir", None))
+        if getattr(config, "compact_every", 0) > 0:
+            raise ValueError(
+                "weight compaction is per-subject (changes Nc mid-run) and "
+                "is not supported by the batched engine; use LifeEngine")
+        p0 = self.problems[0]
+        for p in self.problems[1:]:
+            if (p.phi.n_voxels, p.phi.n_fibers) != (p0.phi.n_voxels,
+                                                    p0.phi.n_fibers):
+                raise ValueError("subjects must share (Nv, Nf) geometry")
+            if not np.array_equal(np.asarray(p.dictionary),
+                                  np.asarray(p0.dictionary)):
+                raise ValueError("subjects must share the dictionary "
+                                 "(same gradient scheme and atoms)")
+        self.dictionary = p0.dictionary
+        self.n_subjects = len(self.problems)
+        self.inspector_seconds = 0.0
+        self._build()
+
+    # -- inspector ----------------------------------------------------------
+    def _resolve_recipe(self):
+        name = self.config.executor
+        if name in _BATCH_RECIPES:
+            return _BATCH_RECIPES[name]
+        if name == "auto":
+            # tune once on the first subject (persistent-cache-backed),
+            # apply the measured choice cohort-wide
+            ex = REGISTRY.create("auto", self.problems[0].phi,
+                                 self.problems[0], self.config, self.cache)
+            dsc_dim = ex.plans["dsc"].restructure
+            wc_dim = ex.plans["wc"].restructure
+            return dsc_dim, wc_dim, _DSC_FNS[dsc_dim], _WC_FNS[wc_dim]
+        raise ValueError(
+            f"executor {name!r} is not vmappable across subjects "
+            f"(supported: {sorted(_BATCH_RECIPES) + ['auto']})")
+
+    def _build(self) -> None:
+        t0 = time.perf_counter()
+        dsc_dim, wc_dim, self._dsc_fn, self._wc_fn = self._resolve_recipe()
+        nc_max = max(p.phi.n_coeffs for p in self.problems)
+        self.nc_padded = nc_max
+
+        def prep(phi: PhiTensor, dim: Optional[str], fn) -> PhiTensor:
+            sorted_phi = sort_by_host(phi, dim)[0] if dim else phi
+            keep_sorted = (fn, dim) in _SEGMENT_SORTED
+            return _pad_sorted(sorted_phi, nc_max, dim, keep_sorted)
+
+        self.phi_dsc = _stack_phis(
+            [prep(p.phi, dsc_dim, self._dsc_fn) for p in self.problems])
+        self.phi_wc = _stack_phis(
+            [prep(p.phi, wc_dim, self._wc_fn) for p in self.problems])
+        self.b = jnp.stack([p.b for p in self.problems])
+        self._runner = jax.jit(self._make_runner(),
+                               static_argnames=("n_iters",))
+        self.inspector_seconds += time.perf_counter() - t0
+
+    def _make_runner(self):
+        d = self.dictionary
+        dsc_fn, wc_fn = self._dsc_fn, self._wc_fn
+
+        def run_batch(phi_dsc, phi_wc, b, w0, *, n_iters: int):
+            def one_step(phi_v, phi_w, b_s, state):
+                return sbbnnls_step(lambda w: dsc_fn(phi_v, d, w),
+                                    lambda y: wc_fn(phi_w, d, y), b_s, state)
+
+            def body(states, _):
+                new = jax.vmap(one_step)(phi_dsc, phi_wc, b, states)
+                return new, new.loss
+
+            s = w0.shape[0]
+            init = SbbnnlsState(
+                w=w0, it=jnp.zeros((s,), jnp.int32),
+                loss=jnp.zeros((s,), w0.dtype))
+            final, losses = jax.lax.scan(body, init, xs=None, length=n_iters)
+            return final.w, losses.T          # (S, Nf), (S, n_iters)
+
+        return run_batch
+
+    # -- driver --------------------------------------------------------------
+    def run(self, n_iters: Optional[int] = None,
+            w0: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, np.ndarray]:
+        """Solve all subjects; returns (W (S, Nf), losses (S, n_iters))."""
+        n_iters = self.config.n_iters if n_iters is None else n_iters
+        nf = self.problems[0].phi.n_fibers
+        if w0 is None:
+            w0 = jnp.ones((self.n_subjects, nf), self.dictionary.dtype)
+        w, losses = self._runner(self.phi_dsc, self.phi_wc, self.b, w0,
+                                 n_iters=n_iters)
+        return w, np.asarray(losses)
+
+    def prune_stats(self, w_batch: jax.Array,
+                    threshold: float = 1e-6) -> List[dict]:
+        out = []
+        for p, w in zip(self.problems, np.asarray(w_batch)):
+            true = np.asarray(p.w_true) > 0
+            kept = w > threshold
+            tp = float(np.sum(kept & true))
+            out.append(dict(
+                kept=float(kept.sum()), total=float(kept.size),
+                precision=tp / max(1.0, float(kept.sum())),
+                recall=tp / max(1.0, float(true.sum()))))
+        return out

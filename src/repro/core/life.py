@@ -1,6 +1,7 @@
 """LiFE end-to-end engine: connectome pruning with pluggable SpMV executors.
 
-Code-version ladder (paper §6.3.1/§6.4.1), selectable via ``executor=``:
+Executor dispatch goes through :mod:`repro.core.registry` — the code-version
+ladder (paper §6.3.1/§6.4.1), selectable via ``executor=``:
 
   naive        CPU-naive        : Figure-3 translation, scatter/gather adds
   opt-paper    CPU/GPU-opt      : per-op restructuring as the paper ships it
@@ -11,6 +12,12 @@ Code-version ladder (paper §6.3.1/§6.4.1), selectable via ``executor=``:
                                   (interpret=True off-TPU)
   auto         runtime autotune : measured selection (paper's hybrid/runtime
                                   choice, §4.1.2)
+  shard        mesh partition   : 2-D shard_map SpMVs (distributed/life_shard)
+
+Inspector products (tile plans, autotune choices) are memoized through the
+persistent :class:`~repro.core.plan_cache.PlanCache`, so a second engine
+construction on the same dataset pays ~zero ``inspector_seconds``
+(amortization across runs, DESIGN.md §6.3).
 
 Weight compaction (``compact_every > 0``) periodically drops coefficients
 whose fiber weight reached zero — the paper's "evaded BLAS call" effect,
@@ -21,21 +28,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import spmv
-from repro.core.inspector import plan_tiles
-from repro.core.restructure import (SpmvPlan, autotune_plan, compact_by_weight,
-                                    sort_by_host)
-from repro.core.sbbnnls import SbbnnlsState, sbbnnls_run, nnls_loss
+from repro.core.plan_cache import PlanCache
+from repro.core.registry import REGISTRY, Executor
+from repro.core.restructure import compact_by_weight
+from repro.core.sbbnnls import nnls_loss, sbbnnls_run
 from repro.core.std import PhiTensor
 from repro.data.dmri import LifeProblem
 
-EXECUTORS = ("naive", "opt-paper", "opt", "kernel", "auto")
+EXECUTORS = REGISTRY.names()          # public alias; registry is the truth
 
 
 @dataclasses.dataclass
@@ -47,69 +53,49 @@ class LifeConfig:
     c_tile: int = 256               # kernel coefficient-tile size
     row_tile: int = 8               # kernel output row-block size
     kernel_interpret: bool = True   # CPU container: validate via interpret
+    shard_rows: int = 1             # `shard` executor mesh geometry (R, C)
+    shard_cols: int = 1
+    # None -> default cache dir ($REPRO_PLAN_CACHE or ~/.cache/repro-life);
+    # "" -> plan caching disabled.
+    plan_cache_dir: Optional[str] = None
 
 
 class LifeEngine:
     """Binds a LifeProblem to an executor; runs SBBNNLS; reports pruning."""
 
-    def __init__(self, problem: LifeProblem, config: LifeConfig):
-        if config.executor not in EXECUTORS:
-            raise ValueError(f"executor must be one of {EXECUTORS}")
+    def __init__(self, problem: LifeProblem, config: LifeConfig,
+                 cache: Optional[PlanCache] = None):
+        if config.executor not in REGISTRY:
+            raise ValueError(f"executor must be one of {REGISTRY.names()}")
         self.problem = problem
         self.config = config
+        self.cache = cache if cache is not None else PlanCache(
+            config.plan_cache_dir)
         self.inspector_seconds = 0.0
         self._build(problem.phi)
 
     # -- inspector ----------------------------------------------------------
     def _build(self, phi: PhiTensor) -> None:
-        cfg = self.config
         t0 = time.perf_counter()
         self.phi = phi
-        if cfg.executor == "naive":
-            self.matvec = lambda w: spmv.dsc_naive(phi, self.problem.dictionary, w)
-            self.rmatvec = lambda y: spmv.wc_naive(phi, self.problem.dictionary, y)
-        elif cfg.executor in ("opt", "opt-paper", "kernel"):
-            phi_v, _ = sort_by_host(phi, "voxel")
-            wc_dim = "atom" if cfg.executor == "opt-paper" else "fiber"
-            phi_w, _ = sort_by_host(phi, wc_dim)
-            if cfg.executor == "kernel":
-                from repro.kernels import ops as kops
-                dsc_plan = plan_tiles(np.asarray(phi_v.voxels), phi.n_voxels,
-                                      c_tile=cfg.c_tile, row_tile=cfg.row_tile)
-                wc_plan = plan_tiles(np.asarray(phi_w.fibers), phi.n_fibers,
-                                     c_tile=cfg.c_tile, row_tile=cfg.row_tile)
-                self.matvec = kops.make_dsc(phi_v, self.problem.dictionary,
-                                            dsc_plan, interpret=cfg.kernel_interpret)
-                self.rmatvec = kops.make_wc(phi_w, self.problem.dictionary,
-                                            wc_plan, interpret=cfg.kernel_interpret)
-            else:
-                wc_fn = spmv.wc_atom_sorted if cfg.executor == "opt-paper" else spmv.wc
-                self.matvec = lambda w: spmv.dsc(phi_v, self.problem.dictionary, w)
-                self.rmatvec = lambda y: wc_fn(phi_w, self.problem.dictionary, y)
-        elif cfg.executor == "auto":
-            self._autotune(phi)
+        self.executor: Executor = REGISTRY.create(
+            self.config.executor, phi, self.problem, self.config, self.cache)
+        self.matvec = self.executor.matvec
+        self.rmatvec = self.executor.rmatvec
         self.inspector_seconds += time.perf_counter() - t0
 
-    def _autotune(self, phi: PhiTensor) -> None:
-        d = self.problem.dictionary
-        w_probe = jnp.ones((phi.n_fibers,), d.dtype)
-        y_probe = jnp.ones((phi.n_voxels, d.shape[1]), d.dtype)
-        # per sort-dim executors: output-side sorts get segment-sum paths,
-        # input-side sorts keep the scatter (paper Table 2/3 combinations)
-        dsc_fns = {"atom": spmv.dsc_atom_sorted, "voxel": spmv.dsc,
-                   "fiber": spmv.dsc_atom_sorted}   # fiber-sort: unsorted Y path
-        wc_fns = {"atom": spmv.wc_atom_sorted, "voxel": spmv.wc_atom_sorted,
-                  "fiber": spmv.wc}
-        self.dsc_plan = autotune_plan(
-            "dsc", phi, lambda p, dim: dsc_fns[dim](p, d, w_probe))
-        self.wc_plan = autotune_plan(
-            "wc", phi, lambda p, dim: wc_fns[dim](p, d, y_probe))
-        phi_v = phi.take(jnp.asarray(self.dsc_plan.order))
-        phi_w = phi.take(jnp.asarray(self.wc_plan.order))
-        dsc_fn = dsc_fns[self.dsc_plan.restructure]
-        wc_fn = wc_fns[self.wc_plan.restructure]
-        self.matvec = lambda w: dsc_fn(phi_v, d, w)
-        self.rmatvec = lambda y: wc_fn(phi_w, d, y)
+    @property
+    def dsc_plan(self):
+        """Autotuned DSC SpmvPlan (auto executor only)."""
+        return self.executor.plans.get("dsc")
+
+    @property
+    def wc_plan(self):
+        return self.executor.plans.get("wc")
+
+    @property
+    def cache_stats(self):
+        return self.cache.stats
 
     # -- driver --------------------------------------------------------------
     def run(self, n_iters: Optional[int] = None,
@@ -151,5 +137,3 @@ class LifeEngine:
             precision=tp / max(1.0, float(kept.sum())),
             recall=tp / max(1.0, float(true.sum())),
         )
-
-

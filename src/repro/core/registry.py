@@ -1,0 +1,272 @@
+"""Executor registry: named factories behind one matvec/rmatvec protocol.
+
+Replaces the if/elif executor ladder that used to live in ``core/life.py``.
+Every way of running the two LiFE SpMV ops — naive scatter, restructured
+segment-sum (paper and TPU sort choices), inspector-planned Pallas kernels,
+runtime autotuning, and the shard_map mesh partition — registers a factory
+under a name; ``LifeEngine``, ``BatchedLifeEngine``, benchmarks and tests
+all resolve executors through the registry, so adding a code version is one
+``@REGISTRY.register(...)`` function, not an engine edit.
+
+Protocol: a factory takes ``(phi, problem, config, cache)`` and returns an
+:class:`Executor` whose ``matvec(w) -> (Nv, Ntheta)`` and
+``rmatvec(y) -> (Nf,)`` run DSC / WC for that code version.  ``cache`` is a
+:class:`~repro.core.plan_cache.PlanCache`; factories that do inspector work
+(tile planning, autotune measurement) route it through the cache so the cost
+is paid once per dataset, not once per construction (DESIGN.md §6).
+
+The ladder (paper §6.3.1/§6.4.1):
+
+  naive        CPU-naive        : Figure-3 translation, scatter/gather adds
+  opt-paper    CPU/GPU-opt      : per-op restructuring as the paper ships it
+  opt          TPU-opt (ours)   : output-side sorts for both ops
+  kernel       TPU Pallas       : inspector-planned tiled kernels
+  auto         runtime autotune : measured selection (paper §4.1.2)
+  shard        mesh partition   : 2-D shard_map SpMVs behind the same protocol
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv
+from repro.core.inspector import plan_tiles
+from repro.core.plan_cache import PlanCache, spmv_plan_key, tile_plan_key
+from repro.core.restructure import SpmvPlan, autotune_plan, sort_by_host
+from repro.core.std import PhiTensor
+
+Array = jax.Array
+MatVec = Callable[[Array], Array]
+
+
+@dataclasses.dataclass
+class Executor:
+    """A bound pair of SpMV closures plus inspector diagnostics."""
+
+    name: str
+    matvec: MatVec                        # w (Nf,) -> y (Nv, Ntheta)
+    rmatvec: MatVec                       # y (Nv, Ntheta) -> w (Nf,)
+    plans: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    # Set by factories that can run under vmap with stacked operands; the
+    # batched engine refuses executors that cannot (kernel plans and mesh
+    # layouts are per-subject static shapes).
+    vmappable: bool = False
+
+
+ExecutorFactory = Callable[..., Executor]
+
+
+class ExecutorRegistry:
+    """Name -> factory mapping with decorator registration."""
+
+    def __init__(self):
+        self._factories: Dict[str, ExecutorFactory] = {}
+
+    def register(self, name: str) -> Callable[[ExecutorFactory], ExecutorFactory]:
+        def deco(factory: ExecutorFactory) -> ExecutorFactory:
+            if name in self._factories:
+                raise ValueError(f"executor {name!r} already registered")
+            self._factories[name] = factory
+            return factory
+        return deco
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._factories))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._factories
+
+    def create(self, name: str, phi: PhiTensor, problem, config,
+               cache: Optional[PlanCache] = None) -> Executor:
+        """Instantiate executor ``name`` for ``phi`` (which may be a
+        compacted descendant of ``problem.phi``)."""
+        if name not in self._factories:
+            raise ValueError(
+                f"executor must be one of {self.names()}, got {name!r}")
+        if cache is None:
+            cache = PlanCache("")        # disabled cache
+        return self._factories[name](phi, problem, config, cache)
+
+
+REGISTRY = ExecutorRegistry()
+
+
+# ----------------------------------------------------------------------------
+# Built-in factories
+# ----------------------------------------------------------------------------
+
+@REGISTRY.register("naive")
+def _make_naive(phi, problem, config, cache) -> Executor:
+    d = problem.dictionary
+    return Executor(
+        name="naive",
+        matvec=lambda w: spmv.dsc_naive(phi, d, w),
+        rmatvec=lambda y: spmv.wc_naive(phi, d, y),
+        vmappable=True)
+
+
+def _sorted_pair(phi: PhiTensor, wc_dim: str):
+    phi_v, order_v = sort_by_host(phi, "voxel")
+    phi_w, order_w = sort_by_host(phi, wc_dim)
+    return phi_v, phi_w, order_v, order_w
+
+
+@REGISTRY.register("opt")
+def _make_opt(phi, problem, config, cache) -> Executor:
+    d = problem.dictionary
+    phi_v, phi_w, _, _ = _sorted_pair(phi, "fiber")
+    return Executor(
+        name="opt",
+        matvec=lambda w: spmv.dsc(phi_v, d, w),
+        rmatvec=lambda y: spmv.wc(phi_w, d, y),
+        vmappable=True)
+
+
+@REGISTRY.register("opt-paper")
+def _make_opt_paper(phi, problem, config, cache) -> Executor:
+    d = problem.dictionary
+    phi_v, phi_w, _, _ = _sorted_pair(phi, "atom")
+    return Executor(
+        name="opt-paper",
+        matvec=lambda w: spmv.dsc(phi_v, d, w),
+        rmatvec=lambda y: spmv.wc_atom_sorted(phi_w, d, y),
+        vmappable=True)
+
+
+def planned_tiles(sorted_ids: np.ndarray, n_rows: int, *, c_tile: int,
+                  row_tile: int, cache: PlanCache):
+    """plan_tiles through the persistent cache (content-addressed)."""
+    key = tile_plan_key(sorted_ids, n_rows, c_tile=c_tile, row_tile=row_tile)
+    plan = cache.get_tile_plan(key)
+    if plan is None:
+        plan = plan_tiles(sorted_ids, n_rows, c_tile=c_tile, row_tile=row_tile)
+        cache.put_tile_plan(key, plan)
+    return plan
+
+
+@REGISTRY.register("kernel")
+def _make_kernel(phi, problem, config, cache) -> Executor:
+    from repro.kernels import ops as kops
+    d = problem.dictionary
+    phi_v, phi_w, _, _ = _sorted_pair(phi, "fiber")
+    dsc_plan = planned_tiles(np.asarray(phi_v.voxels), phi.n_voxels,
+                             c_tile=config.c_tile, row_tile=config.row_tile,
+                             cache=cache)
+    wc_plan = planned_tiles(np.asarray(phi_w.fibers), phi.n_fibers,
+                            c_tile=config.c_tile, row_tile=config.row_tile,
+                            cache=cache)
+    return Executor(
+        name="kernel",
+        matvec=kops.make_dsc(phi_v, d, dsc_plan,
+                             interpret=config.kernel_interpret),
+        rmatvec=kops.make_wc(phi_w, d, wc_plan,
+                             interpret=config.kernel_interpret),
+        plans=dict(dsc_tiles=dsc_plan, wc_tiles=wc_plan))
+
+
+# per sort-dim executors: output-side sorts get segment-sum paths,
+# input-side sorts keep the scatter (paper Table 2/3 combinations)
+_DSC_FNS = {"atom": spmv.dsc_atom_sorted, "voxel": spmv.dsc,
+            "fiber": spmv.dsc_atom_sorted}   # fiber-sort: unsorted Y path
+_WC_FNS = {"atom": spmv.wc_atom_sorted, "voxel": spmv.wc_atom_sorted,
+           "fiber": spmv.wc}
+
+
+@REGISTRY.register("auto")
+def _make_auto(phi, problem, config, cache) -> Executor:
+    d = problem.dictionary
+    atoms = np.asarray(phi.atoms)
+    voxels = np.asarray(phi.voxels)
+    fibers = np.asarray(phi.fibers)
+
+    def tuned(op: str, run) -> SpmvPlan:
+        key = spmv_plan_key(op, atoms, voxels, fibers)
+        plan = cache.get_spmv_plan(key)
+        if plan is None:
+            plan = autotune_plan(op, phi, run)
+            cache.put_spmv_plan(key, plan)
+        if plan.order is None:      # cached choice without the permutation
+            _, plan.order = sort_by_host(phi, plan.restructure)
+        return plan
+
+    w_probe = jnp.ones((phi.n_fibers,), d.dtype)
+    y_probe = jnp.ones((phi.n_voxels, d.shape[1]), d.dtype)
+    dsc_plan = tuned("dsc", lambda p, dim: _DSC_FNS[dim](p, d, w_probe))
+    wc_plan = tuned("wc", lambda p, dim: _WC_FNS[dim](p, d, y_probe))
+
+    phi_v = phi.take(jnp.asarray(dsc_plan.order))
+    phi_w = phi.take(jnp.asarray(wc_plan.order))
+    dsc_fn = _DSC_FNS[dsc_plan.restructure]
+    wc_fn = _WC_FNS[wc_plan.restructure]
+    return Executor(
+        name="auto",
+        matvec=lambda w: dsc_fn(phi_v, d, w),
+        rmatvec=lambda y: wc_fn(phi_w, d, y),
+        plans=dict(dsc=dsc_plan, wc=wc_plan),
+        vmappable=True)
+
+
+@REGISTRY.register("shard")
+def _make_shard(phi, problem, config, cache) -> Executor:
+    """2-D mesh-partitioned SpMVs behind the single-process protocol.
+
+    Builds an (R, C) = (shard_rows, shard_cols) mesh over the available
+    devices, lays out the coefficients per distributed/life_shard.py, and
+    wraps the shard_map'd per-op functions with the global<->padded layout
+    maps so callers see plain (Nf,) -> (Nv, Ntheta) closures.
+    """
+    from repro import compat
+    from repro.distributed import life_shard as LS
+
+    R = getattr(config, "shard_rows", 1)
+    C = getattr(config, "shard_cols", 1)
+    if R * C > len(jax.devices()):
+        raise ValueError(
+            f"shard executor needs {R * C} devices, have {len(jax.devices())}")
+    mesh = compat.make_mesh((R, C), ("data", "model"))
+    n_theta = problem.dictionary.shape[1]
+    shards = LS.build_life_shards(phi, n_theta, R=R, C=C)
+    dsc_sm, wc_sm = LS.make_sharded_ops(
+        mesh, dict(nv_local=shards.nv_local, nf_local=shards.nf_local,
+                   n_theta=n_theta))
+
+    # global <-> padded layout index maps (host-computed once)
+    w_pos = np.zeros(phi.n_fibers, np.int64)
+    for c in range(C):
+        lo, hi = shards.fiber_cuts[c], shards.fiber_cuts[c + 1]
+        w_pos[lo:hi] = c * shards.nf_local + np.arange(hi - lo)
+    y_pos = np.zeros(phi.n_voxels, np.int64)
+    for r in range(R):
+        lo, hi = shards.voxel_cuts[r], shards.voxel_cuts[r + 1]
+        y_pos[lo:hi] = r * shards.nv_local + np.arange(hi - lo)
+    w_pos_j = jnp.asarray(w_pos)
+    y_pos_j = jnp.asarray(y_pos)
+
+    d = problem.dictionary
+    cell = (jnp.asarray(shards.dsc_atoms), jnp.asarray(shards.dsc_voxels_local),
+            jnp.asarray(shards.dsc_fibers_local), jnp.asarray(shards.dsc_values))
+    wcell = (jnp.asarray(shards.wc_atoms), jnp.asarray(shards.wc_voxels_local),
+             jnp.asarray(shards.wc_fibers_local), jnp.asarray(shards.wc_values))
+    nf_pad = C * shards.nf_local
+
+    @jax.jit
+    def matvec(w: Array) -> Array:
+        w_padded = jnp.zeros((nf_pad,), w.dtype).at[w_pos_j].set(w)
+        y_padded = dsc_sm(*cell, d, w_padded)
+        return jnp.take(y_padded, y_pos_j, axis=0)
+
+    @jax.jit
+    def rmatvec(y: Array) -> Array:
+        nv_pad = R * shards.nv_local
+        y_padded = jnp.zeros((nv_pad, y.shape[1]), y.dtype
+                             ).at[y_pos_j].set(y)
+        w_padded = wc_sm(*wcell, d, y_padded)
+        return jnp.take(w_padded, w_pos_j)
+
+    return Executor(name="shard", matvec=matvec, rmatvec=rmatvec,
+                    plans=dict(mesh=mesh, shards=shards))

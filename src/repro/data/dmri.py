@@ -19,7 +19,7 @@ a faithful sweep axis, not to claim anatomical realism.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,3 +132,18 @@ def synth_connectome(
     )
     return LifeProblem(phi=phi, dictionary=dictionary, b=b,
                        w_true=w_true_j, stats=stats)
+
+
+def synth_cohort(n_subjects: int, *, base_seed: int = 0,
+                 algorithm: str = "PROB", **kwargs) -> List[LifeProblem]:
+    """Cohort of subjects sharing the acquisition, varying the anatomy.
+
+    All subjects share grid / n_fibers / n_theta / n_atoms — and therefore
+    the *same* dictionary (make_dictionary is deterministic in the atom
+    geometry, matching the real setting where canonical atoms depend on the
+    gradient scheme, not the subject).  Per-subject seeds vary streamline
+    geometry, so coefficient counts Nc differ across subjects — exactly the
+    padding problem BatchedLifeEngine solves.
+    """
+    return [synth_connectome(seed=base_seed + s, algorithm=algorithm,
+                             **kwargs) for s in range(n_subjects)]

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.inspector import shard_boundaries
 from repro.core.sbbnnls import projected_gradient
 from repro.core.std import PhiTensor
@@ -221,8 +222,55 @@ def make_sharded_step(mesh: Mesh, shards_meta: Dict[str, int],
     specs_in = (cell, cell, cell, cell, cell, cell, cell, cell,
                 P(None, None), yspec, wspec, P())
     specs_out = (P("model"), P())
-    return jax.shard_map(step, mesh=mesh, in_specs=specs_in,
-                         out_specs=specs_out, check_vma=False)
+    return compat.shard_map(step, mesh=mesh, in_specs=specs_in,
+                            out_specs=specs_out)
+
+
+def make_sharded_ops(mesh: Mesh, shards_meta: Dict[str, int]):
+    """Per-op shard_map'd SpMVs for the executor-registry `shard` path.
+
+    Same cell layout and collectives as :func:`make_sharded_step`, but
+    exposed as standalone DSC / WC closures so the registry can bind them to
+    the single-process matvec/rmatvec protocol (the solver then runs
+    undistributed while each SpMV fans out over the mesh).
+
+    Returns (dsc_fn, wc_fn):
+      dsc_fn(a, v, f, vals, d, w_padded)  -> (R*nv_local, Ntheta)
+      wc_fn(a, v, f, vals, d, y_padded)   -> (C*nf_local,)
+    """
+    rows = _row_axes(mesh)
+    nv_l = shards_meta["nv_local"]
+    nf_l = shards_meta["nf_local"]
+    cell = P(rows, "model", None)
+
+    def dsc_op(a, v, f, vals, d, w_loc):
+        sq = lambda x: x.reshape(x.shape[-1])
+        a, v, f, vals = map(sq, (a, v, f, vals))
+        scaled = jnp.take(w_loc.reshape(-1), f) * vals
+        contrib = jnp.take(d, a, axis=0) * scaled[:, None]
+        y = jax.ops.segment_sum(contrib, v, num_segments=nv_l,
+                                indices_are_sorted=True)
+        return jax.lax.psum(y, "model")
+
+    def wc_op(a, v, f, vals, d, y_loc):
+        sq = lambda x: x.reshape(x.shape[-1])
+        a, v, f, vals = map(sq, (a, v, f, vals))
+        y2 = y_loc.reshape(y_loc.shape[-2], y_loc.shape[-1])
+        dots = jnp.einsum("ct,ct->c", jnp.take(d, a, axis=0),
+                          jnp.take(y2, v, axis=0))
+        w = jax.ops.segment_sum(dots * vals, f, num_segments=nf_l,
+                                indices_are_sorted=True)
+        return jax.lax.psum(w, rows)
+
+    dsc_fn = compat.shard_map(
+        dsc_op, mesh=mesh,
+        in_specs=(cell, cell, cell, cell, P(None, None), P("model")),
+        out_specs=P(rows, None))
+    wc_fn = compat.shard_map(
+        wc_op, mesh=mesh,
+        in_specs=(cell, cell, cell, cell, P(None, None), P(rows, None)),
+        out_specs=P("model"))
+    return dsc_fn, wc_fn
 
 
 def _safe(num, den):
@@ -278,11 +326,11 @@ def make_sharded_step_1d(mesh: Mesh, shards_meta: Dict[str, int]):
         return w_new, 0.5 * jnp.vdot(y, y)
 
     cell = P(all_axes, None)
-    return jax.shard_map(
+    return compat.shard_map(
         step, mesh=mesh,
         in_specs=(cell, cell, cell, cell, P(None, None), P(None, None),
                   P(None), P()),
-        out_specs=(P(None), P()), check_vma=False)
+        out_specs=(P(None), P()))
 
 
 def life_input_specs_1d(mesh: Mesh, *, n_voxels: int = 247_356,

@@ -103,7 +103,7 @@ def lower_cell(arch: str, shape: str, mesh, *,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = HC.xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # trip-count-corrected cost model (cost_analysis counts while bodies once)
     hc = HC.analyze(hlo, n_chips)
@@ -168,7 +168,7 @@ def _lower_life(mesh, shape: str, variant: str = "2d") -> Dict[str, Any]:
             compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = HC.xla_cost_analysis(compiled)
     hc = HC.analyze(compiled.as_text(), n_chips)
     # useful flops: 2 ops/nnz/theta x (2 DSC + 1.5 WC avg -> here 3 spmv + dots)
     n_theta = meta["n_theta"]

@@ -1,0 +1,101 @@
+"""Deterministic fallback for the slice of the hypothesis API this suite uses.
+
+Installed into ``sys.modules`` by conftest.py ONLY when the real hypothesis
+package is missing (the declared dev dependency in pyproject.toml is the
+intended path; this keeps the suite collectable on minimal containers).
+
+Semantics: ``@given(...)`` runs the test body ``max_examples`` times with
+examples drawn from a per-test seeded generator — deterministic across runs
+(no shrinking, no failure database; plain exhaustive-ish sampling).
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def composite(fn):
+    """hypothesis.strategies.composite: fn(draw, *args) -> value."""
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strat: strat.example_from(rng), *args, **kwargs)
+        return SearchStrategy(draw_value)
+    return builder
+
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+def given(*strategies):
+    def deco(test):
+        # NB: no functools.wraps — pytest must see a zero-parameter
+        # signature, or it would try to resolve the drawn arguments as
+        # fixtures (real hypothesis rewrites the signature the same way).
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(test.__module__.encode()
+                              + test.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                test(*[s.example_from(rng) for s in strategies])
+        wrapper.__name__ = test.__name__
+        wrapper.__qualname__ = test.__qualname__
+        wrapper.__module__ = test.__module__
+        wrapper.__doc__ = test.__doc__
+        wrapper._stub_given = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts and ignores everything but max_examples (deadline etc.)."""
+    def deco(test):
+        test._stub_max_examples = max_examples
+        return test
+    return deco
+
+
+def install(sys_modules) -> None:
+    """Register this module as `hypothesis` (+ `.strategies`)."""
+    import types
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats",
+                 "composite", "SearchStrategy"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys_modules["hypothesis"] = hyp
+    sys_modules["hypothesis.strategies"] = st

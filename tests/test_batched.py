@@ -1,0 +1,83 @@
+"""BatchedLifeEngine: cohort results must match per-subject engines."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batched import BatchedLifeEngine, _pad_sorted
+from repro.core.life import LifeConfig, LifeEngine
+from repro.core.registry import REGISTRY
+from repro.core.restructure import sort_by_host
+from repro.data.dmri import synth_cohort
+
+
+@pytest.fixture(scope="module")
+def cohort():
+    return synth_cohort(3, base_seed=10, n_fibers=64, n_theta=16,
+                        n_atoms=24, grid=(10, 10, 10))
+
+
+@pytest.mark.parametrize("executor", ["naive", "opt", "opt-paper"])
+def test_batched_matches_per_subject(cohort, executor):
+    cfg = LifeConfig(executor=executor, n_iters=12, plan_cache_dir="")
+    beng = BatchedLifeEngine(cohort, cfg)
+    W, losses = beng.run()
+    assert W.shape == (3, cohort[0].phi.n_fibers)
+    assert losses.shape == (3, 12)
+    for s, p in enumerate(cohort):
+        w_ref, l_ref = LifeEngine(p, cfg).run()
+        np.testing.assert_allclose(np.asarray(W[s]), np.asarray(w_ref),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{executor} subject {s}")
+        np.testing.assert_allclose(losses[s], l_ref, rtol=1e-5)
+
+
+def test_batched_auto_uses_one_tuned_recipe(cohort, tmp_path):
+    cfg = LifeConfig(executor="auto", n_iters=10,
+                     plan_cache_dir=str(tmp_path))
+    beng = BatchedLifeEngine(cohort, cfg)
+    W, _ = beng.run()
+    # auto tunes on subject 0 through the persistent cache
+    assert beng.cache.stats.misses == 2
+    # per-subject results still close to the reference executor
+    ref_cfg = LifeConfig(executor="opt", n_iters=10, plan_cache_dir="")
+    for s, p in enumerate(cohort):
+        w_ref, _ = LifeEngine(p, ref_cfg).run()
+        np.testing.assert_allclose(np.asarray(W[s]), np.asarray(w_ref),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_padding_is_inert():
+    """A padded subject must produce bit-comparable results to unpadded."""
+    from repro.core import spmv
+    [p] = synth_cohort(1, base_seed=3, n_fibers=32, n_theta=8, n_atoms=12,
+                       grid=(8, 8, 8))
+    phi_v, _ = sort_by_host(p.phi, "voxel")
+    padded = _pad_sorted(phi_v, phi_v.n_coeffs + 37, "voxel", True)
+    assert padded.n_coeffs == phi_v.n_coeffs + 37
+    assert not np.any(np.diff(np.asarray(padded.voxels)) < 0)  # still sorted
+    w = jnp.asarray(np.random.default_rng(0).uniform(size=32), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(spmv.dsc(padded, p.dictionary, w)),
+        np.asarray(spmv.dsc(phi_v, p.dictionary, w)),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_rejects_non_vmappable_executor(cohort):
+    for executor in ("kernel", "shard"):
+        with pytest.raises(ValueError, match="not vmappable"):
+            BatchedLifeEngine(
+                cohort, LifeConfig(executor=executor, plan_cache_dir=""))
+
+
+def test_rejects_mismatched_geometry(cohort):
+    small = synth_cohort(1, base_seed=99, n_fibers=32, n_theta=16,
+                         n_atoms=24, grid=(10, 10, 10))
+    with pytest.raises(ValueError, match="geometry"):
+        BatchedLifeEngine(cohort + small, LifeConfig(plan_cache_dir=""))
+
+
+def test_registry_names_cover_ladder():
+    for name in ("naive", "opt", "opt-paper", "kernel", "auto", "shard"):
+        assert name in REGISTRY
+    with pytest.raises(ValueError, match="executor must be one of"):
+        REGISTRY.create("nope", None, None, None)

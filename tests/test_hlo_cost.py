@@ -28,7 +28,7 @@ def test_scan_flops_corrected():
         return y
 
     c = jax.jit(scanned).lower(x, ws).compile()
-    xla = c.cost_analysis()["flops"]
+    xla = hlo_cost.xla_cost_analysis(c)["flops"]
     hc = hlo_cost.analyze(c.as_text(), 1)
     expected = 8 * 2 * 128 ** 3
     assert xla < expected / 4                   # XLA undercounts
@@ -47,11 +47,13 @@ def test_matches_xla_on_unrolled_grad():
         return jnp.sum(y.astype(jnp.float32) ** 2)
 
     c = jax.jit(jax.grad(loss, argnums=(0, 1))).lower(x, ws).compile()
-    ca = c.cost_analysis()
+    ca = hlo_cost.xla_cost_analysis(c)
     hc = hlo_cost.analyze(c.as_text(), 1)
     assert 0.8 <= hc.flops / ca["flops"] <= 1.05       # dots only
-    np.testing.assert_allclose(hc.bytes_accessed, ca["bytes accessed"],
+    np.testing.assert_allclose(hc.bytes_accessed_xla, ca["bytes accessed"],
                                rtol=0.05)
+    # the HBM approximation only ever discounts the visitor accounting
+    assert hc.bytes_accessed <= hc.bytes_accessed_xla
 
 
 def test_scan_equals_unrolled_through_cost_model():
@@ -68,10 +70,11 @@ def test_scan_equals_unrolled_through_cost_model():
     c_scan = jax.jit(jax.grad(f_scan, argnums=(0, 1))).lower(x, ws).compile()
     c_un = jax.jit(jax.grad(f_unroll, argnums=(0, 1))).lower(x, ws).compile()
     hc = hlo_cost.analyze(c_scan.as_text(), 1)
-    xla_unrolled = c_un.cost_analysis()["flops"]
+    xla_unrolled = hlo_cost.xla_cost_analysis(c_un)["flops"]
     np.testing.assert_allclose(hc.flops, xla_unrolled, rtol=0.15)
 
 
+@pytest.mark.slow        # 8-device subprocess + fresh compile
 def test_collective_parse_on_psum():
     """Collectives inside an 8-step scan are multiplied by the trip count."""
     import subprocess, sys, os, textwrap, json
@@ -81,18 +84,18 @@ def test_collective_parse_on_psum():
         import sys; sys.path.insert(0, %r)
         import jax, jax.numpy as jnp, json
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.roofline import hlo_cost
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("d",))
         def body(x, w):
             y = jax.lax.psum(x @ w, "d")          # (16, 64) all-reduce
             i = jax.lax.axis_index("d")
             return jax.lax.dynamic_slice(y, (0, i * 8), (16, 8)), None
         def f(x, ws):
             return jax.lax.scan(body, x, ws)[0]
-        sm = jax.shard_map(f, mesh=mesh,
-                           in_specs=(P(None, "d"), P(None, "d", None)),
-                           out_specs=P(None, None), check_vma=False)
+        sm = compat.shard_map(f, mesh=mesh,
+                              in_specs=(P(None, "d"), P(None, "d", None)),
+                              out_specs=P(None, None))
         x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
         ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
         with mesh:

@@ -5,6 +5,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+pytestmark = pytest.mark.slow        # Pallas interpret sweeps
+
 from repro.core import spmv
 from repro.core.inspector import plan_tiles
 from repro.core.restructure import sort_by_host
