@@ -1,0 +1,63 @@
+"""Beyond-paper: per-format DSC/WC comparison (the formats/ subsystem).
+
+One row per (format, op) with the padding-overhead and resident-bytes
+accounting in the derived column (';'-separated so the CSV stays 3 columns)
+— the audit trail for ``formats/select.py``: the final rows report the
+selector's choice and the statistics it derived it from.
+
+Formats are timed through the executors they actually run with off-kernel:
+sorted-COO segment-sum ops, the SELL jnp reference (same dataflow as the
+Pallas kernels without interpret-mode noise), and the ALTO-ordered scatter
+ops over one linearized copy.
+"""
+import jax.numpy as jnp
+
+from benchmarks.common import emit, problem, time_fn
+from repro.core import spmv
+from repro.formats import AltoPhi, CooPhi, SellPhi
+from repro.formats import select as fsel
+from repro.formats.sell import dsc_reference, wc_reference
+
+
+def run():
+    p = problem()
+    d = p.dictionary
+    w = jnp.ones((p.phi.n_fibers,), jnp.float32)
+    y = p.b
+
+    coo_dsc = CooPhi.encode(p.phi, op="dsc")
+    coo_wc = CooPhi.encode(p.phi, op="wc")
+    sell_dsc = SellPhi.encode(p.phi, op="dsc")
+    sell_wc = SellPhi.encode(p.phi, op="wc")
+    alto, _ = AltoPhi.encode(p.phi).sort()
+    phi_lin = alto.decode()
+
+    rows = [
+        ("coo", "dsc", lambda: spmv.dsc(coo_dsc.phi, d, w),
+         coo_dsc.padding_overhead, coo_dsc.nbytes),
+        ("coo", "wc", lambda: spmv.wc(coo_wc.phi, d, y),
+         coo_wc.padding_overhead, coo_wc.nbytes),
+        ("sell", "dsc", lambda: dsc_reference(sell_dsc, d, w),
+         sell_dsc.padding_overhead, sell_dsc.nbytes),
+        ("sell", "wc", lambda: wc_reference(sell_wc, d, y),
+         sell_wc.padding_overhead, sell_wc.nbytes),
+        ("alto", "dsc", lambda: spmv.dsc_naive(phi_lin, d, w),
+         alto.padding_overhead, alto.nbytes),
+        ("alto", "wc", lambda: spmv.wc_naive(phi_lin, d, y),
+         alto.padding_overhead, alto.nbytes),
+    ]
+    for fmt, op, fn, overhead, nbytes in rows:
+        us = time_fn(fn)
+        emit(f"table12.{op}.{fmt}", us,
+             f"pad={overhead:.2f}x;mbytes={nbytes / 1e6:.2f}")
+
+    plan = fsel.choose_format(p.phi, d)
+    emit("table12.selected", 0.0,
+         f"{plan.format};{plan.reason}")
+    for k in ("dsc.sell_overhead", "wc.sell_overhead",
+              "dsc.run_mean", "wc.run_mean"):
+        emit(f"table12.stat.{k}", 0.0, f"{plan.stats.get(k, float('nan')):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -101,7 +101,9 @@ class BatchedLifeEngine:
         self.problems = list(problems)
         self.config = config
         self.cache = cache if cache is not None else PlanCache(
-            getattr(config, "plan_cache_dir", None))
+            getattr(config, "plan_cache_dir", None),
+            getattr(config, "plan_cache_max_bytes", None))
+        self.format_plan = None       # set when config.format != "coo"
         if getattr(config, "compact_every", 0) > 0:
             raise ValueError(
                 "weight compaction is per-subject (changes Nc mid-run) and "
@@ -123,6 +125,20 @@ class BatchedLifeEngine:
     # -- inspector ----------------------------------------------------------
     def _resolve_recipe(self):
         name = self.config.executor
+        fmt = getattr(self.config, "format", "coo")
+        self._alto_order = False
+        if fmt != "coo":
+            # Format selection across the vmappable subset: SELL widths are
+            # per-subject static shapes, so only COO and ALTO stack; "auto"
+            # picks between them on the first subject (FormatPlan-cached),
+            # and an explicit format="sell" is rejected by resolve_format.
+            from repro.formats import select as fsel
+            self.format_plan = fsel.resolve_format(
+                self.problems[0].phi, self.problems[0], self.config,
+                self.cache, allowed=("coo", "alto"))
+            if self.format_plan.format == "alto":
+                self._alto_order = True
+                return None, None, spmv.dsc_naive, spmv.wc_naive
         if name in _BATCH_RECIPES:
             return _BATCH_RECIPES[name]
         if name == "auto":
@@ -148,10 +164,17 @@ class BatchedLifeEngine:
             keep_sorted = (fn, dim) in _SEGMENT_SORTED
             return _pad_sorted(sorted_phi, nc_max, dim, keep_sorted)
 
+        phis = [p.phi for p in self.problems]
+        if self._alto_order:
+            # one ALTO-linearized ordering per subject serves both ops
+            # (locality in every mode at once; scatter executors above)
+            from repro.formats.alto import AltoPhi
+            phis = [AltoPhi.encode(phi).sort()[0].decode() for phi in phis]
+
         self.phi_dsc = _stack_phis(
-            [prep(p.phi, dsc_dim, self._dsc_fn) for p in self.problems])
+            [prep(phi, dsc_dim, self._dsc_fn) for phi in phis])
         self.phi_wc = _stack_phis(
-            [prep(p.phi, wc_dim, self._wc_fn) for p in self.problems])
+            [prep(phi, wc_dim, self._wc_fn) for phi in phis])
         self.b = jnp.stack([p.b for p in self.problems])
         self._runner = jax.jit(self._make_runner(),
                                static_argnames=("n_iters",))

@@ -117,6 +117,62 @@ def plan_tiles(sorted_ids: np.ndarray, n_rows: int, *, c_tile: int,
                     n_rows_padded=n_rows_padded)
 
 
+def run_lengths(ids: np.ndarray) -> np.ndarray:
+    """Length of each run of equal output index once sorted — i.e. the
+    nnz-per-touched-row distribution (sub-vector lengths, paper §4.1.2),
+    in ascending row-id order."""
+    ids = np.asarray(ids, np.int64)
+    if ids.size == 0:
+        return np.zeros(0, np.int64)
+    return np.unique(ids, return_counts=True)[1]
+
+
+def sell_geometry(max_nnz: int, n_rows: int, *, row_tile: int,
+                  slot_tile: int) -> Tuple[int, int]:
+    """(width, n_rows_padded) a SELL layout allocates for this shape.
+
+    Single source of truth shared by the layout itself
+    (``formats/sell.py:SellPhi.encode``) and the selector's overhead
+    prediction below — the accept/reject heuristic is only sound if the
+    predicted slots equal the allocated slots."""
+    width = max(slot_tile, -(-max_nnz // slot_tile) * slot_tile)
+    n_rows_padded = -(-n_rows // row_tile) * row_tile
+    return width, n_rows_padded
+
+
+def phi_stats(phi, *, row_tile: int = 8, slot_tile: int = 32) -> dict:
+    """Format-selection statistics (consumed by formats/select.py).
+
+    Per op (dsc: voxel rows, wc: fiber rows): run-length histogram moments
+    of the output dimension plus the padding overhead a SELL layout with
+    this (row_tile, slot_tile) geometry would pay — computed from counts
+    alone, without materializing the layout.  Global Nc/Nv/Nf ratios ride
+    along for the density heuristics.
+    """
+    out = dict(
+        n_coeffs=float(phi.n_coeffs),
+        nc_per_voxel=phi.n_coeffs / max(1, phi.n_voxels),
+        nc_per_fiber=phi.n_coeffs / max(1, phi.n_fibers),
+        nc_per_atom=phi.n_coeffs / max(1, phi.n_atoms),
+    )
+    for op, ids, n_rows in (("dsc", phi.voxels, phi.n_voxels),
+                            ("wc", phi.fibers, phi.n_fibers)):
+        touched = run_lengths(ids)
+        max_nnz = int(touched.max()) if touched.size else 0
+        width, n_rows_padded = sell_geometry(max_nnz, n_rows,
+                                             row_tile=row_tile,
+                                             slot_tile=slot_tile)
+        slots = n_rows_padded * width
+        out[f"{op}.rows_touched"] = float(touched.size) / max(1, n_rows)
+        out[f"{op}.run_mean"] = float(touched.mean()) if touched.size else 0.0
+        out[f"{op}.run_p99"] = (float(np.percentile(touched, 99))
+                                if touched.size else 0.0)
+        out[f"{op}.run_max"] = float(max_nnz)
+        out[f"{op}.sell_width"] = float(width)
+        out[f"{op}.sell_overhead"] = slots / max(1, phi.n_coeffs) - 1.0
+    return out
+
+
 def shard_boundaries(sorted_ids: np.ndarray, n_shards: int) -> np.ndarray:
     """Equal-nnz shard cuts snapped to sub-vector boundaries.
 

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan_cache import PlanCache
-from repro.core.registry import REGISTRY, Executor
+from repro.core.registry import REGISTRY, Executor, create_for_format
 from repro.core.restructure import compact_by_weight
 from repro.core.sbbnnls import nnls_loss, sbbnnls_run
 from repro.core.std import PhiTensor
@@ -55,9 +55,21 @@ class LifeConfig:
     kernel_interpret: bool = True   # CPU container: validate via interpret
     shard_rows: int = 1             # `shard` executor mesh geometry (R, C)
     shard_cols: int = 1
+    # Phi layout: "coo" (canonical; executor= picks the code version),
+    # "sell" / "alto" (force that format's executor), or "auto" (pick per
+    # dataset via formats/select.py, FormatPlan-cached).  DESIGN.md §7.
+    format: str = "coo"
+    slot_tile: int = 32             # SELL slots consumed per kernel grid step
+    # format="auto" SELL thresholds: padding overhead (extra slots/coeff)
+    # below sell_accept takes SELL outright, above sell_reject strikes it
+    sell_accept: float = 1.0
+    sell_reject: float = 4.0
     # None -> default cache dir ($REPRO_PLAN_CACHE or ~/.cache/repro-life);
     # "" -> plan caching disabled.
     plan_cache_dir: Optional[str] = None
+    # cap on the on-disk plan cache (oldest entries pruned past it);
+    # None -> $REPRO_PLAN_CACHE_MAX_BYTES or unbounded.
+    plan_cache_max_bytes: Optional[int] = None
 
 
 class LifeEngine:
@@ -70,7 +82,7 @@ class LifeEngine:
         self.problem = problem
         self.config = config
         self.cache = cache if cache is not None else PlanCache(
-            config.plan_cache_dir)
+            config.plan_cache_dir, config.plan_cache_max_bytes)
         self.inspector_seconds = 0.0
         self._build(problem.phi)
 
@@ -78,8 +90,15 @@ class LifeEngine:
     def _build(self, phi: PhiTensor) -> None:
         t0 = time.perf_counter()
         self.phi = phi
-        self.executor: Executor = REGISTRY.create(
-            self.config.executor, phi, self.problem, self.config, self.cache)
+        if self.config.format == "coo":
+            self.executor: Executor = REGISTRY.create(
+                self.config.executor, phi, self.problem, self.config,
+                self.cache)
+        else:
+            # format-parameterized path: "sell"/"alto" force that layout's
+            # executor; "auto" selects per dataset (FormatPlan-cached)
+            self.executor = create_for_format(
+                phi, self.problem, self.config, self.cache)
         self.matvec = self.executor.matvec
         self.rmatvec = self.executor.rmatvec
         self.inspector_seconds += time.perf_counter() - t0
@@ -88,6 +107,11 @@ class LifeEngine:
     def dsc_plan(self):
         """Autotuned DSC SpmvPlan (auto executor only)."""
         return self.executor.plans.get("dsc")
+
+    @property
+    def format_plan(self):
+        """Chosen FormatPlan (format != "coo" only)."""
+        return self.executor.plans.get("format")
 
     @property
     def wc_plan(self):

@@ -34,8 +34,11 @@ import numpy as np
 
 from repro.core.inspector import TilePlan
 from repro.core.restructure import SpmvPlan
+from repro.formats.base import FORMAT_VERSION as _PHI_FORMAT_VERSION
+from repro.formats.base import FormatPlan
 
 _ENV_VAR = "REPRO_PLAN_CACHE"
+_MAX_BYTES_ENV_VAR = "REPRO_PLAN_CACHE_MAX_BYTES"
 _FORMAT_VERSION = 1      # bump on any incompatible serialization change
 
 
@@ -45,6 +48,17 @@ def default_cache_dir() -> str:
         return env
     return os.path.join(os.path.expanduser("~"), ".cache", "repro-life",
                         "plans")
+
+
+def default_max_bytes() -> Optional[int]:
+    """Size cap from ``$REPRO_PLAN_CACHE_MAX_BYTES``; None = unbounded."""
+    env = os.environ.get(_MAX_BYTES_ENV_VAR)
+    if not env:
+        return None
+    try:
+        return int(env)
+    except ValueError:
+        return None
 
 
 def tile_plan_key(sorted_ids: np.ndarray, n_rows: int, *, c_tile: int,
@@ -70,6 +84,25 @@ def spmv_plan_key(op: str, atoms: np.ndarray, voxels: np.ndarray,
     return h.hexdigest()
 
 
+def format_plan_key(atoms: np.ndarray, voxels: np.ndarray, fibers: np.ndarray,
+                    *, sizes, row_tile: int, slot_tile: int, allowed,
+                    sell_accept: float = 0.0,
+                    sell_reject: float = 0.0) -> str:
+    """Digest for a FormatPlan: the full index content + mode sizes + layout
+    geometry + the candidate set and heuristic thresholds the selector
+    decided under (different thresholds may legitimately choose a different
+    format for the same data).  Versioned by formats.base.FORMAT_VERSION so
+    any incompatible layout change invalidates every cached choice."""
+    h = hashlib.sha256()
+    h.update(b"format-plan-v%d.%d:" % (_FORMAT_VERSION, _PHI_FORMAT_VERSION))
+    h.update(",".join(sorted(allowed)).encode())
+    h.update(np.float64([sell_accept, sell_reject]).tobytes())
+    h.update(np.int64(list(sizes) + [row_tile, slot_tile]).tobytes())
+    for arr in (atoms, voxels, fibers):
+        h.update(np.ascontiguousarray(arr, np.int64).tobytes())
+    return h.hexdigest()
+
+
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
@@ -84,10 +117,19 @@ class CacheStats:
 
 class PlanCache:
     """On-disk plan store.  ``directory=None`` -> default location;
-    ``directory=""`` -> disabled (every lookup misses, nothing is written)."""
+    ``directory=""`` -> disabled (every lookup misses, nothing is written).
 
-    def __init__(self, directory: Optional[str] = None):
+    ``max_bytes`` caps the directory's total ``.npz`` footprint: after each
+    write, oldest entries (by mtime; a hit refreshes it) are pruned until the
+    cache fits — so long-running services never fill the disk with plans for
+    datasets they'll never see again.  ``None`` defers to
+    ``$REPRO_PLAN_CACHE_MAX_BYTES``; unset means unbounded.
+    """
+
+    def __init__(self, directory: Optional[str] = None,
+                 max_bytes: Optional[int] = None):
         self.directory = default_cache_dir() if directory is None else directory
+        self.max_bytes = default_max_bytes() if max_bytes is None else max_bytes
         self.stats = CacheStats()
 
     @property
@@ -107,11 +149,46 @@ class PlanCache:
             with os.fdopen(fd, "wb") as f:
                 np.savez(f, **payload)
             os.replace(tmp, self._path(key))
+            self._prune(keep=self._path(key))
         except OSError:
             # fail-open: an unwritable cache (read-only volume, quota) must
             # never take down the engine — the plan is simply not persisted
             if tmp is not None and os.path.exists(tmp):
                 os.unlink(tmp)
+
+    def _prune(self, keep: str) -> None:
+        """Evict oldest entries until the directory fits ``max_bytes``.
+        ``keep`` (the just-written path) is never evicted — not even on
+        mtime ties with concurrently touched entries, and not when it alone
+        exceeds the cap (evicting it would silently disable the cache)."""
+        if self.max_bytes is None:
+            return
+        entries = []
+        try:
+            with os.scandir(self.directory) as it:
+                for e in it:
+                    if e.name.endswith(".npz") and e.path != keep:
+                        st = e.stat()
+                        entries.append((st.st_mtime, st.st_size, e.path))
+            total = sum(size for _, size, _ in entries) \
+                + os.stat(keep).st_size
+        except OSError:
+            return
+        for _, size, path in sorted(entries):          # oldest first
+            if total <= self.max_bytes:
+                break
+            try:
+                os.unlink(path)
+                total -= size
+            except OSError:
+                pass                                   # raced with another engine
+
+    def _touch(self, key: str) -> None:
+        """Refresh an entry's mtime on hit so pruning is LRU-ish."""
+        try:
+            os.utime(self._path(key))
+        except OSError:
+            pass
 
     def _read(self, key: str) -> Optional[dict]:
         if not self.enabled:
@@ -119,7 +196,9 @@ class PlanCache:
         path = self._path(key)
         try:
             with np.load(path, allow_pickle=False) as z:
-                return {k: z[k] for k in z.files}
+                raw = {k: z[k] for k in z.files}
+            self._touch(key)
+            return raw
         except (FileNotFoundError, OSError, ValueError, KeyError):
             return None     # corrupt/foreign entries degrade to a miss
 
@@ -166,3 +245,30 @@ class PlanCache:
         if plan.order is not None:
             payload["order"] = np.asarray(plan.order, np.int64)
         self._write(key, payload)
+
+    # -- FormatPlan -----------------------------------------------------------
+    def get_format_plan(self, key: str) -> Optional[FormatPlan]:
+        raw = self._read(key)
+        self.stats.record(raw is not None)
+        if raw is None:
+            return None
+        try:
+            params = {str(k): int(v) for k, v in
+                      zip(raw["params_keys"], raw["params_vals"])}
+            stats = {str(k): float(v) for k, v in
+                     zip(raw["stats_keys"], raw["stats_vals"])}
+            return FormatPlan(format=str(raw["format"]),
+                              reason=str(raw["reason"]),
+                              params=params, stats=stats)
+        except (KeyError, ValueError):
+            return None
+
+    def put_format_plan(self, key: str, plan: FormatPlan) -> None:
+        pk = sorted(plan.params)
+        sk = sorted(plan.stats)
+        self._write(key, dict(
+            format=np.str_(plan.format), reason=np.str_(plan.reason),
+            params_keys=np.asarray(pk, np.str_),
+            params_vals=np.asarray([plan.params[k] for k in pk], np.int64),
+            stats_keys=np.asarray(sk, np.str_),
+            stats_vals=np.asarray([plan.stats[k] for k in sk], np.float64)))

@@ -21,8 +21,18 @@ The ladder (paper §6.3.1/§6.4.1):
   opt-paper    CPU/GPU-opt      : per-op restructuring as the paper ships it
   opt          TPU-opt (ours)   : output-side sorts for both ops
   kernel       TPU Pallas       : inspector-planned tiled kernels
+  kernel-sell  TPU Pallas/SELL  : blocked-ELL layout, direct row-block
+                                  accumulation (no prefetch map, DESIGN.md §7)
+  alto         linearized COO   : ALTO single-index sort order, one Phi copy
+                                  serves both ops
   auto         runtime autotune : measured selection (paper §4.1.2)
   shard        mesh partition   : 2-D shard_map SpMVs behind the same protocol
+
+Format-parameterized construction: ``create_for_format`` resolves a
+``LifeConfig.format`` choice ("coo"/"sell"/"alto"/"auto", the latter via
+``formats.select``) to the executor that consumes the chosen layout, and
+records the :class:`~repro.formats.base.FormatPlan` in the executor's
+``plans`` dict so engines can report what was picked and why.
 """
 from __future__ import annotations
 
@@ -167,6 +177,72 @@ def _make_kernel(phi, problem, config, cache) -> Executor:
         rmatvec=kops.make_wc(phi_w, d, wc_plan,
                              interpret=config.kernel_interpret),
         plans=dict(dsc_tiles=dsc_plan, wc_tiles=wc_plan))
+
+
+@REGISTRY.register("kernel-sell")
+def _make_kernel_sell(phi, problem, config, cache) -> Executor:
+    """Pallas executors over the blocked-ELL layout (formats/sell.py).
+
+    The SELL encode replaces the TilePlan inspector entirely: the layout's
+    static slot arrays ARE the plan, so there is nothing to tile, no scalar
+    prefetch, and no one-hot scatter in the kernels (DESIGN.md §7)."""
+    from repro.formats.sell import SellPhi
+    from repro.kernels import ops as kops
+    d = problem.dictionary
+    row_tile = getattr(config, "row_tile", 8)
+    slot_tile = getattr(config, "slot_tile", 32)
+    sell_dsc = SellPhi.encode(phi, op="dsc", row_tile=row_tile,
+                              slot_tile=slot_tile)
+    sell_wc = SellPhi.encode(phi, op="wc", row_tile=row_tile,
+                             slot_tile=slot_tile)
+    return Executor(
+        name="kernel-sell",
+        matvec=kops.make_dsc_sell(sell_dsc, d,
+                                  interpret=config.kernel_interpret),
+        rmatvec=kops.make_wc_sell(sell_wc, d,
+                                  interpret=config.kernel_interpret),
+        plans=dict(sell_dsc=sell_dsc, sell_wc=sell_wc))
+
+
+@REGISTRY.register("alto")
+def _make_alto(phi, problem, config, cache) -> Executor:
+    """Both ops over one ALTO-ordered Phi copy (formats/alto.py).
+
+    The linearized sort gives locality in every mode at once, so the same
+    coefficient order feeds DSC and WC — halving resident index memory
+    versus the two per-op sorted copies the other executors keep."""
+    from repro.formats.alto import AltoPhi
+    d = problem.dictionary
+    enc, _ = AltoPhi.encode(phi).sort()
+    phi_lin = enc.decode()
+    # keep accounting only — retaining `enc` would hold a second
+    # (lin, values) copy alive for the executor's lifetime
+    meta = dict(n_coeffs=enc.n_coeffs, nbytes=enc.nbytes)
+    return Executor(
+        name="alto",
+        matvec=lambda w: spmv.dsc_naive(phi_lin, d, w),
+        rmatvec=lambda y: spmv.wc_naive(phi_lin, d, y),
+        plans=dict(alto=meta),
+        vmappable=True)
+
+
+def create_for_format(phi, problem, config,
+                      cache: Optional[PlanCache] = None,
+                      allowed: Optional[Tuple[str, ...]] = None) -> Executor:
+    """Resolve ``config.format`` (possibly "auto") to a bound executor.
+
+    The chosen/loaded FormatPlan lands in ``executor.plans["format"]``.
+    ``format="coo"`` (the default) preserves the pre-format behaviour:
+    the executor named by ``config.executor`` over the canonical layout.
+    """
+    from repro.formats import select as fsel
+    if cache is None:
+        cache = PlanCache("")
+    plan = fsel.resolve_format(phi, problem, config, cache, allowed=allowed)
+    executor = REGISTRY.create(fsel.executor_for(plan.format, config),
+                               phi, problem, config, cache)
+    executor.plans["format"] = plan
+    return executor
 
 
 # per sort-dim executors: output-side sorts get segment-sum paths,

@@ -81,7 +81,8 @@ class SpmvPlan:
     """
 
     op: str                      # "dsc" | "wc"
-    restructure: str             # member of SORT_DIMS
+    restructure: str             # member of SORT_DIMS (or a format name when
+                                 # the candidates are formats, see formats/select.py)
     partition: str               # "coeff" | "voxel" | "atom" | "fiber"
     order: Optional[np.ndarray] = None   # cached permutation
 
@@ -89,7 +90,17 @@ class SpmvPlan:
         return f"{self.op}: sort-by-{self.restructure}, {self.partition}-partition"
 
 
+# In-process memo for autotune_plan.  Keys include phi.n_coeffs so a
+# compact_by_weight shrink (same logical dataset, fewer coefficients) misses
+# cleanly instead of replaying a stale choice; clear_plan_cache() gives
+# long-running services an explicit bound.  Persistent, content-addressed
+# caching lives in core/plan_cache.py — prefer routing through that.
 _PLAN_CACHE: Dict[Tuple, SpmvPlan] = {}
+
+
+def clear_plan_cache() -> None:
+    """Drop every in-process memoized plan (the dict is otherwise unbounded)."""
+    _PLAN_CACHE.clear()
 
 
 def autotune_plan(
@@ -99,22 +110,29 @@ def autotune_plan(
     candidates: Tuple[str, ...] = ("atom", "voxel", "fiber"),
     repeats: int = 3,
     cache_key: Optional[Tuple] = None,
+    sorter: Callable[[PhiTensor, str], Tuple] = sort_by_host,
 ) -> SpmvPlan:
     """Measure each restructuring candidate `repeats` times, pick the best.
 
     Mirrors the paper's runtime selection ("average execution time for three
-    runs").  ``run(sorted_phi, dim)`` executes the op for a tensor sorted
-    along ``dim`` and blocks until ready.
+    runs").  ``run(prepared, candidate)`` executes the op for the candidate's
+    prepared data and blocks until ready.  ``sorter(phi, candidate)`` builds
+    that prepared data plus an optional permutation; the default sorts along
+    an indirection dimension, and formats/select.py substitutes format
+    encoders so the same measurement loop arbitrates between layouts.
     """
-    if cache_key is not None and (cache_key := ("plan", op) + cache_key) in _PLAN_CACHE:
-        return _PLAN_CACHE[cache_key]
-    best: Tuple[float, str, np.ndarray] | None = None
+    full_key = None
+    if cache_key is not None:
+        full_key = ("plan", op, phi.n_coeffs) + cache_key
+        if full_key in _PLAN_CACHE:
+            return _PLAN_CACHE[full_key]
+    best: Tuple[float, str, Optional[np.ndarray]] | None = None
     for dim in candidates:
-        sorted_phi, order = sort_by_host(phi, dim)
-        run(sorted_phi, dim).block_until_ready()  # compile/warmup
+        prepared, order = sorter(phi, dim)
+        run(prepared, dim).block_until_ready()  # compile/warmup
         t0 = time.perf_counter()
         for _ in range(repeats):
-            run(sorted_phi, dim).block_until_ready()
+            run(prepared, dim).block_until_ready()
         dt = (time.perf_counter() - t0) / repeats
         if best is None or dt < best[0]:
             best = (dt, dim, order)
@@ -124,6 +142,6 @@ def autotune_plan(
     out_dim = "voxel" if op == "dsc" else "fiber"
     partition = out_dim if best[1] == out_dim else "coeff"
     plan = SpmvPlan(op=op, restructure=best[1], partition=partition, order=best[2])
-    if cache_key is not None:
-        _PLAN_CACHE[cache_key] = plan
+    if full_key is not None:
+        _PLAN_CACHE[full_key] = plan
     return plan

@@ -1,0 +1,25 @@
+"""Sparse-format subsystem: swappable Phi layouts (DESIGN.md §7).
+
+Importing this package registers the built-in formats:
+
+  coo   sorted-COO PhiTensor (the canonical layout every pre-existing
+        executor consumes)                                — formats/coo.py
+  sell  sliced-ELL/blocked layout for direct row-block Pallas
+        accumulation (no prefetched row map, no one-hot)  — formats/sell.py
+  alto  bit-interleaved linearized single-index encoding  — formats/alto.py
+
+``formats.select`` picks one per dataset from inspector statistics with an
+autotune fallback; engines reach it via ``LifeConfig(format="auto")``.
+"""
+from repro.formats.base import (FORMATS, FORMAT_VERSION, FormatPlan,
+                                PhiFormat, canonical_triples, format_names,
+                                get_format, register_format)
+from repro.formats.alto import AltoPhi
+from repro.formats.coo import CooPhi
+from repro.formats.sell import SellPhi
+
+__all__ = [
+    "FORMATS", "FORMAT_VERSION", "FormatPlan", "PhiFormat",
+    "canonical_triples", "format_names", "get_format", "register_format",
+    "AltoPhi", "CooPhi", "SellPhi",
+]

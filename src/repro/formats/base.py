@@ -1,0 +1,122 @@
+"""PhiFormat protocol + format registry (DESIGN.md §7).
+
+The paper's whole argument is that SpMV performance is decided by the data
+*representation*; Chen et al. (arXiv:1805.11938) show no single sparse format
+wins across matrices on many-core hardware, and ALTO (arXiv:2403.06348)
+argues the same for sparse tensors.  This package therefore makes the Phi
+layout a first-class, swappable object:
+
+  * every concrete layout (:mod:`~repro.formats.coo`,
+    :mod:`~repro.formats.sell`, :mod:`~repro.formats.alto`) registers itself
+    under a name,
+  * all of them share one contract — ``encode`` from the canonical COO
+    :class:`~repro.core.std.PhiTensor`, ``decode`` back to the *exact* same
+    coefficient multiset (order may differ; triples and values round-trip
+    bit-exactly), plus storage accounting (``nbytes``, ``padding_overhead``),
+  * :mod:`~repro.formats.select` picks one per dataset from inspector
+    statistics, with the choice serialized as a :class:`FormatPlan` through
+    the persistent plan cache.
+
+Executors consume formats through :mod:`repro.core.registry`; the format
+name reaches engines via ``LifeConfig(format=...)`` (``"auto"`` delegates to
+the selector).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.std import PhiTensor
+
+#: bump on any incompatible change to a format's on-disk/plan representation
+FORMAT_VERSION = 1
+
+#: output ("row") dimension per SpMV op — voxel rows for DSC, fiber rows
+#: for WC (DESIGN.md §2: we sort/layout by the output dimension on TPU).
+OUTPUT_DIMS = {"dsc": "voxel", "wc": "fiber"}
+
+
+@runtime_checkable
+class PhiFormat(Protocol):
+    """Structural contract every concrete Phi layout satisfies.
+
+    Concrete classes are dataclasses; ``encode`` is a classmethod building
+    the layout from the canonical COO tensor, ``decode`` inverts it exactly.
+    """
+
+    name: ClassVar[str]
+
+    @classmethod
+    def encode(cls, phi: PhiTensor, *, op: str = "dsc", **params) -> "PhiFormat":
+        ...
+
+    def decode(self) -> PhiTensor:
+        ...
+
+    @property
+    def nbytes(self) -> int:
+        ...
+
+    @property
+    def padding_overhead(self) -> float:
+        """Stored slots / real coefficients - 1 (0.0 = no padding waste)."""
+        ...
+
+
+FORMATS: Dict[str, type] = {}
+
+
+def register_format(cls):
+    """Class decorator: register a PhiFormat implementation by ``cls.name``."""
+    name = cls.name
+    if name in FORMATS:
+        raise ValueError(f"format {name!r} already registered")
+    FORMATS[name] = cls
+    return cls
+
+
+def format_names() -> Tuple[str, ...]:
+    return tuple(sorted(FORMATS))
+
+
+def get_format(name: str):
+    if name not in FORMATS:
+        raise ValueError(f"format must be one of {format_names()}, got {name!r}")
+    return FORMATS[name]
+
+
+def canonical_triples(phi: PhiTensor) -> Tuple[np.ndarray, ...]:
+    """(atoms, voxels, fibers, values) sorted by (atom, voxel, fiber).
+
+    Round-trip tests compare layouts through this canonical order because
+    formats are free to permute coefficients (that reordering *is* the
+    optimization); the multiset of (triple, value) pairs is the invariant.
+    """
+    a = np.asarray(phi.atoms, np.int64)
+    v = np.asarray(phi.voxels, np.int64)
+    f = np.asarray(phi.fibers, np.int64)
+    vals = np.asarray(phi.values)
+    order = np.lexsort((f, v, a))
+    return a[order], v[order], f[order], vals[order]
+
+
+@dataclasses.dataclass
+class FormatPlan:
+    """Per-dataset format choice, serialized through the PlanCache.
+
+    ``format``: chosen format name; ``reason``: "heuristic" or "autotune";
+    ``params``: layout geometry (row_tile / slot_tile for SELL); ``stats``:
+    the inspector statistics the decision was based on, kept so benchmarks
+    and audits can explain the choice without re-running the inspector.
+    """
+
+    format: str
+    reason: str = "heuristic"
+    params: Dict[str, int] = dataclasses.field(default_factory=dict)
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def describe(self) -> str:
+        ps = ",".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        return f"format={self.format} ({self.reason}{'; ' + ps if ps else ''})"

@@ -1,0 +1,64 @@
+"""Sorted-COO format: the canonical PhiTensor plus a remembered sort.
+
+This wraps the representation the repo has always used (``core/std.py``) in
+the :class:`~repro.formats.base.PhiFormat` contract: encode = stable sort by
+the op's output dimension (the restructuring of DESIGN.md §2), decode =
+undo the permutation, so the original coefficient order round-trips exactly.
+All existing segment-sum executors consume this layout unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.restructure import sort_by_host
+from repro.core.std import PhiTensor
+from repro.formats.base import OUTPUT_DIMS, register_format
+
+
+@register_format
+@dataclasses.dataclass
+class CooPhi:
+    """COO coefficients stably sorted along ``sort_dim``.
+
+    ``order`` is the applied permutation (original -> sorted), kept so
+    ``decode`` restores the exact input ordering and so plans can replay
+    the restructuring without re-sorting (the paper's amortization).
+    """
+
+    name: ClassVar[str] = "coo"
+
+    phi: PhiTensor                       # sorted coefficients
+    sort_dim: str                        # "atom" | "voxel" | "fiber"
+    order: np.ndarray                    # int64[Nc] permutation applied
+
+    @classmethod
+    def encode(cls, phi: PhiTensor, *, op: str = "dsc",
+               sort_dim: Optional[str] = None, **_params) -> "CooPhi":
+        dim = OUTPUT_DIMS[op] if sort_dim is None else sort_dim
+        sorted_phi, order = sort_by_host(phi, dim)
+        return cls(phi=sorted_phi, sort_dim=dim, order=np.asarray(order))
+
+    def decode(self) -> PhiTensor:
+        inverse = np.empty_like(self.order)
+        inverse[self.order] = np.arange(self.order.size)
+        return self.phi.take(jnp.asarray(inverse, jnp.int32))
+
+    @property
+    def n_coeffs(self) -> int:
+        return self.phi.n_coeffs
+
+    @property
+    def nbytes(self) -> int:
+        p = self.phi
+        return int(p.atoms.size * p.atoms.dtype.itemsize
+                   + p.voxels.size * p.voxels.dtype.itemsize
+                   + p.fibers.size * p.fibers.dtype.itemsize
+                   + p.values.size * p.values.dtype.itemsize)
+
+    @property
+    def padding_overhead(self) -> float:
+        return 0.0                      # COO stores exactly Nc slots

@@ -1,0 +1,171 @@
+"""Per-dataset format selection: heuristic first, measurement when unsure.
+
+Chen et al. (arXiv:1805.11938) show no single SpMV format wins across
+matrices on many-core hardware; this module is that observation applied to
+Phi.  The decision pipeline:
+
+1. **Cache** — the choice is a :class:`~repro.formats.base.FormatPlan`
+   keyed by ``plan_cache.format_plan_key`` (full index content + geometry +
+   candidate set, format-versioned); a warm engine rebuild loads it and
+   never re-runs selection.
+2. **Heuristic** — from ``core/inspector.py:phi_stats`` run-length
+   statistics: SELL's padding overhead is computable in O(Nc) without
+   encoding anything.  Overhead at most ``sell_accept`` extra slots per
+   coefficient -> take SELL outright (dense uniform rows: the direct
+   row-block kernels win and the padding is cheap); at least
+   ``sell_reject`` -> SELL is struck from the candidate set (skewed row
+   degrees: padding would dominate bytes moved).
+3. **Autotune fallback** — whenever more than one candidate survives the
+   heuristic (SELL in its ambiguous zone, or COO vs ALTO with no static
+   signal between them), measure: the same three-runs-per-candidate loop
+   as the paper's runtime restructuring selection, literally reused from
+   ``restructure.autotune_plan`` with the format encoders plugged in as
+   the ``sorter`` and the DSC executors (the dominant op, ~2
+   calls/iteration vs WC's ~1.5) as the ``run``.
+
+``resolve_format`` is the engine entry point: it also handles explicit
+``LifeConfig(format="sell"/"alto"/"coo")`` requests (no selection, plan
+records ``reason="explicit"``) and maps the chosen format to the executor
+registry name.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv
+from repro.core.inspector import phi_stats
+from repro.core.restructure import autotune_plan, sort_by_host
+from repro.core.std import PhiTensor
+from repro.formats import sell as sell_mod
+from repro.formats.alto import AltoPhi
+from repro.formats.base import FormatPlan, format_names
+from repro.formats.sell import DEFAULT_ROW_TILE, DEFAULT_SLOT_TILE, SellPhi
+
+#: SELL padding-overhead thresholds (extra slots per real coefficient)
+DEFAULT_SELL_ACCEPT = 1.0
+DEFAULT_SELL_REJECT = 4.0
+
+#: format name -> executor registry name; None = defer to config.executor
+#: (COO is what every pre-existing executor already consumes)
+_FORMAT_EXECUTORS = {"coo": None, "sell": "kernel-sell", "alto": "alto"}
+
+
+def executor_for(format_name: str, config) -> str:
+    """Registry name that runs a format (COO defers to config.executor)."""
+    if format_name not in _FORMAT_EXECUTORS:
+        raise ValueError(
+            f"format must be one of {format_names()}, got {format_name!r}")
+    mapped = _FORMAT_EXECUTORS[format_name]
+    return getattr(config, "executor", "opt") if mapped is None else mapped
+
+
+def _geometry(config) -> Tuple[int, int]:
+    return (getattr(config, "row_tile", DEFAULT_ROW_TILE),
+            getattr(config, "slot_tile", DEFAULT_SLOT_TILE))
+
+
+def choose_format(
+    phi: PhiTensor,
+    dictionary,
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    slot_tile: int = DEFAULT_SLOT_TILE,
+    allowed: Tuple[str, ...] = ("coo", "sell", "alto"),
+    sell_accept: float = DEFAULT_SELL_ACCEPT,
+    sell_reject: float = DEFAULT_SELL_REJECT,
+    cache=None,
+) -> FormatPlan:
+    """Pick a Phi format for one dataset (see module docstring pipeline)."""
+    if not allowed:
+        raise ValueError("allowed must name at least one format")
+    key = None
+    if cache is not None and cache.enabled:
+        from repro.core.plan_cache import format_plan_key
+        key = format_plan_key(
+            np.asarray(phi.atoms), np.asarray(phi.voxels),
+            np.asarray(phi.fibers),
+            sizes=(phi.n_atoms, phi.n_voxels, phi.n_fibers),
+            row_tile=row_tile, slot_tile=slot_tile, allowed=allowed,
+            sell_accept=sell_accept, sell_reject=sell_reject)
+        plan = cache.get_format_plan(key)
+        if plan is not None:
+            return plan
+
+    stats = phi_stats(phi, row_tile=row_tile, slot_tile=slot_tile)
+    params = dict(row_tile=row_tile, slot_tile=slot_tile)
+    overhead = max(stats["dsc.sell_overhead"], stats["wc.sell_overhead"])
+
+    candidates = tuple(allowed)
+    # strike SELL on heavy skew — unless it is the only candidate the
+    # caller permits, in which case the caller's constraint wins
+    if "sell" in candidates and overhead >= sell_reject and len(candidates) > 1:
+        candidates = tuple(f for f in candidates if f != "sell")
+    if "sell" in candidates and overhead <= sell_accept:
+        plan = FormatPlan("sell", "heuristic", params, stats)
+    elif len(candidates) == 1:
+        plan = FormatPlan(candidates[0], "heuristic", params, stats)
+    else:
+        plan = FormatPlan(_measure_formats(phi, dictionary, candidates,
+                                           row_tile, slot_tile),
+                          "autotune", params, stats)
+
+    if key is not None:
+        cache.put_format_plan(key, plan)
+    return plan
+
+
+def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
+                     row_tile: int, slot_tile: int) -> str:
+    """Autotune fallback: time the DSC executor of each candidate format
+    through restructure.autotune_plan's measurement loop."""
+    w_probe = jnp.ones((phi.n_fibers,), dictionary.dtype)
+
+    def sorter(p: PhiTensor, fmt: str):
+        if fmt == "sell":
+            return SellPhi.encode(p, op="dsc", row_tile=row_tile,
+                                  slot_tile=slot_tile), None
+        if fmt == "alto":
+            enc, order = AltoPhi.encode(p).sort()
+            return enc.decode(), order
+        return sort_by_host(p, "voxel")            # coo
+
+    def run(prepared, fmt: str):
+        if fmt == "sell":
+            return sell_mod.dsc_reference(prepared, dictionary, w_probe)
+        if fmt == "alto":
+            return spmv.dsc_naive(prepared, dictionary, w_probe)
+        return spmv.dsc(prepared, dictionary, w_probe)  # coo, voxel-sorted
+
+    plan = autotune_plan("dsc", phi, run, candidates=tuple(allowed),
+                         sorter=sorter)
+    return plan.restructure                        # holds the format name
+
+
+def resolve_format(phi: PhiTensor, problem, config, cache=None,
+                   allowed: Optional[Tuple[str, ...]] = None) -> FormatPlan:
+    """Engine entry point: honor an explicit ``config.format`` or select.
+
+    ``allowed`` restricts the candidate set (the batched engine passes the
+    vmappable subset — SELL widths are per-subject static shapes).
+    """
+    fmt = getattr(config, "format", "coo")
+    row_tile, slot_tile = _geometry(config)
+    params = dict(row_tile=row_tile, slot_tile=slot_tile)
+    if fmt != "auto":
+        if fmt not in _FORMAT_EXECUTORS:
+            raise ValueError(
+                f"format must be one of {format_names() + ('auto',)}, "
+                f"got {fmt!r}")
+        if allowed is not None and fmt not in allowed:
+            raise ValueError(
+                f"format {fmt!r} is not supported here (allowed: {allowed})")
+        return FormatPlan(fmt, "explicit", params)
+    return choose_format(
+        phi, problem.dictionary, row_tile=row_tile, slot_tile=slot_tile,
+        allowed=tuple(allowed) if allowed is not None else ("coo", "sell", "alto"),
+        sell_accept=getattr(config, "sell_accept", DEFAULT_SELL_ACCEPT),
+        sell_reject=getattr(config, "sell_reject", DEFAULT_SELL_REJECT),
+        cache=cache)

@@ -1,0 +1,200 @@
+"""SELL: sliced-ELL/blocked Phi layout for direct row-block accumulation.
+
+The COO Pallas path (``kernels/dsc.py``/``wc.py`` over a ``TilePlan``) pays
+two irregularity taxes inside the kernel: a scalar-prefetched ``row_block``
+map drives the output BlockSpec, and the within-tile scatter is a one-hot
+MXU matmul.  SELL removes both by moving the irregularity into the *layout*:
+
+  * coefficients are sorted by the op's output dimension (voxel for DSC,
+    fiber for WC — DESIGN.md §2) and laid out row-major: slot ``[r, s]``
+    holds the ``s``-th coefficient of output row ``r``,
+  * every row's run is padded to the common ``width`` (a ``slot_tile``
+    multiple) with inert slots (value 0), and rows are padded to a
+    ``row_tile`` multiple — so a ``(row_tile, slot_tile)`` block of the
+    layout touches exactly the ``row_tile`` output rows of block ``i``,
+    statically, with **no** prefetched row map and **no** one-hot matmul:
+    the kernel reduces over the slot axis and accumulates straight into the
+    output block (``kernels/dsc.py:dsc_sell_pallas``).
+
+The price is padding: ``width`` is the max per-row run length rounded up,
+so skewed row-degree distributions waste slots — exactly the format
+trade-off :mod:`repro.formats.select` arbitrates with the run-length
+statistics from ``core/inspector.py:phi_stats`` (Chen et al.
+arXiv:1805.11938: no single format wins; pick per dataset).  Per-slice
+widths (``slice_widths``) are kept for accounting: they are what a ragged
+SELL-C-sigma would allocate, and the gap to the uniform width is reported
+by ``benchmarks/table12_formats.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import numpy as np
+
+from repro.core.inspector import sell_geometry
+from repro.core.std import PhiTensor
+from repro.formats.base import OUTPUT_DIMS, register_format
+
+DEFAULT_ROW_TILE = 8         # output rows per block (f32 sublane multiple)
+DEFAULT_SLOT_TILE = 32       # slots consumed per kernel grid step
+
+
+def _dims_for(op: str):
+    """(output dim, other dim) index-vector names for an op."""
+    out = OUTPUT_DIMS[op]
+    return out, ("fiber" if out == "voxel" else "voxel")
+
+
+@register_format
+@dataclasses.dataclass
+class SellPhi:
+    """Blocked-ELL Phi for one op, dense ``(n_rows_padded, width)`` arrays.
+
+    ``atoms``/``others``/``values``: slot ``[r, s]`` is the ``s``-th
+    coefficient of output row ``r`` (``others`` is the non-output indirection
+    vector: fibers for DSC, voxels for WC; padding slots hold index 0 and
+    value 0 so they contribute nothing).  ``row_nnz`` is the exact per-row
+    coefficient count — the decode mask and the padding audit.
+    """
+
+    name: ClassVar[str] = "sell"
+
+    op: str                              # "dsc" | "wc"
+    atoms: np.ndarray                    # int32 (n_rows_padded, width)
+    others: np.ndarray                   # int32 (n_rows_padded, width)
+    values: np.ndarray                   # fp    (n_rows_padded, width)
+    row_nnz: np.ndarray                  # int32 (n_rows,)
+    row_tile: int
+    slot_tile: int
+    n_atoms: int
+    n_voxels: int
+    n_fibers: int
+
+    # -- encode / decode ------------------------------------------------------
+    @classmethod
+    def encode(cls, phi: PhiTensor, *, op: str = "dsc",
+               row_tile: int = DEFAULT_ROW_TILE,
+               slot_tile: int = DEFAULT_SLOT_TILE, **_params) -> "SellPhi":
+        out_dim, other_dim = _dims_for(op)
+        vec = {"atom": phi.atoms, "voxel": phi.voxels, "fiber": phi.fibers}
+        out_ids = np.asarray(vec[out_dim], np.int64)
+        n_rows = {"voxel": phi.n_voxels, "fiber": phi.n_fibers}[out_dim]
+        nc = out_ids.size
+
+        order = np.argsort(out_ids, kind="stable")
+        out_sorted = out_ids[order]
+        row_nnz = np.bincount(out_sorted, minlength=n_rows).astype(np.int32)
+        max_nnz = int(row_nnz.max()) if nc else 0
+        width, n_rows_padded = sell_geometry(max_nnz, n_rows,
+                                             row_tile=row_tile,
+                                             slot_tile=slot_tile)
+
+        atoms = np.zeros((n_rows_padded, width), np.int32)
+        others = np.zeros((n_rows_padded, width), np.int32)
+        np_vals = np.asarray(phi.values)
+        values = np.zeros((n_rows_padded, width), np_vals.dtype)
+        if nc:
+            row_start = np.zeros(n_rows + 1, np.int64)
+            np.cumsum(row_nnz, out=row_start[1:])
+            slot = np.arange(nc) - row_start[out_sorted]      # pos within row
+            flat = out_sorted * width + slot
+            atoms.reshape(-1)[flat] = np.asarray(phi.atoms, np.int32)[order]
+            others.reshape(-1)[flat] = np.asarray(vec[other_dim], np.int32)[order]
+            values.reshape(-1)[flat] = np_vals[order]
+        return cls(op=op, atoms=atoms, others=others, values=values,
+                   row_nnz=row_nnz, row_tile=row_tile, slot_tile=slot_tile,
+                   n_atoms=phi.n_atoms, n_voxels=phi.n_voxels,
+                   n_fibers=phi.n_fibers)
+
+    def decode(self) -> PhiTensor:
+        import jax.numpy as jnp
+        out_dim, _ = _dims_for(self.op)
+        width = self.atoms.shape[1]
+        mask = (np.arange(width)[None, :]
+                < self.row_nnz[:, None].astype(np.int64))      # (n_rows, W)
+        rows = np.broadcast_to(
+            np.arange(self.n_rows)[:, None], mask.shape)[mask]
+        trimmed = slice(0, self.n_rows)
+        atoms = self.atoms[trimmed][mask]
+        others = self.others[trimmed][mask]
+        values = self.values[trimmed][mask]
+        out32 = rows.astype(np.int32)
+        voxels, fibers = ((out32, others) if out_dim == "voxel"
+                          else (others, out32))
+        return PhiTensor(
+            atoms=jnp.asarray(atoms), voxels=jnp.asarray(voxels),
+            fibers=jnp.asarray(fibers), values=jnp.asarray(values),
+            n_atoms=self.n_atoms, n_voxels=self.n_voxels,
+            n_fibers=self.n_fibers)
+
+    # -- geometry / accounting ------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.n_voxels if self.op == "dsc" else self.n_fibers
+
+    @property
+    def n_coeffs(self) -> int:
+        return int(self.row_nnz.sum())
+
+    @property
+    def width(self) -> int:
+        return self.atoms.shape[1]
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.atoms.shape[0] // self.row_tile
+
+    @property
+    def n_chunks(self) -> int:
+        return self.width // self.slot_tile
+
+    @property
+    def slice_widths(self) -> np.ndarray:
+        """Per row-block width a ragged SELL-C-sigma would allocate
+        (max row nnz in the slice, rounded up to the slot tile)."""
+        padded = np.zeros(self.atoms.shape[0], np.int64)
+        padded[: self.n_rows] = self.row_nnz
+        per_slice = padded.reshape(-1, self.row_tile).max(axis=1)
+        return -(-per_slice // self.slot_tile) * self.slot_tile
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.atoms.nbytes + self.others.nbytes + self.values.nbytes
+                   + self.row_nnz.nbytes)
+
+    @property
+    def padding_overhead(self) -> float:
+        """Allocated slots / real coefficients - 1 over the dense layout."""
+        slots = self.atoms.size
+        return slots / max(1, self.n_coeffs) - 1.0
+
+
+# ----------------------------------------------------------------------------
+# Pure-jnp reference executors over the SELL layout.  Same dataflow as the
+# Pallas kernels (kernels/dsc.py:dsc_sell_pallas) minus the blocking: the
+# test oracle for the kernels, and the measurement proxy formats/select.py
+# times when arbitrating formats (off-TPU the kernels run in interpret mode,
+# whose timing says nothing about the layout).
+# ----------------------------------------------------------------------------
+
+def dsc_reference(sell: SellPhi, dictionary, w):
+    """y = M w over the SELL layout: per-row slot reduction, no scatter."""
+    import jax.numpy as jnp
+    atoms = jnp.asarray(sell.atoms)
+    fibers = jnp.asarray(sell.others)              # DSC: others = fibers
+    values = jnp.asarray(sell.values)
+    scaled = jnp.take(w, fibers) * values          # (rows_padded, W)
+    contrib = jnp.take(dictionary, atoms, axis=0) * scaled[..., None]
+    return contrib.sum(axis=1)[: sell.n_voxels]    # (Nv, Ntheta)
+
+
+def wc_reference(sell: SellPhi, dictionary, y):
+    """w = M^T y over the SELL layout: per-row dot accumulation."""
+    import jax.numpy as jnp
+    atoms = jnp.asarray(sell.atoms)
+    voxels = jnp.asarray(sell.others)              # WC: others = voxels
+    values = jnp.asarray(sell.values)
+    yg = jnp.take(y, voxels, axis=0)               # (rows_padded, W, Ntheta)
+    dots = (jnp.take(dictionary, atoms, axis=0) * yg).sum(-1) * values
+    return dots.sum(axis=1)[: sell.n_fibers]       # (Nf,)

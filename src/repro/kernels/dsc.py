@@ -18,6 +18,14 @@ Executor for an inspector ``TilePlan`` over voxel-sorted coefficients
 Scalar-prefetched ``row_block`` drives the output BlockSpec index_map, which
 is exactly the inspector/executor split of the paper: the host-side sort +
 tile plan is the inspector, this kernel is the executor.
+
+``dsc_sell_pallas`` is the SELL fast path (DESIGN.md §7): over the blocked
+ELL layout of ``formats/sell.py`` the tile -> output-block mapping is the
+identity on grid axis 0, so there is **no** scalar prefetch and no one-hot
+matmul — slot ``[r, s]`` belongs to output row ``r`` by construction, and
+the kernel reduces over the slot axis straight into the resident output
+block.  The irregularity the TilePlan machinery handles at run time is paid
+once, as padding, at encode time.
 """
 from __future__ import annotations
 
@@ -89,3 +97,51 @@ def dsc_pallas(row_block: jax.Array, atoms_p: jax.Array, scaled_p: jax.Array,
             (n_row_blocks * row_tile, n_theta_p), dictionary_padded.dtype),
         interpret=interpret,
     )(row_block, atoms_p, scaled_p, local_row_p, dictionary_padded)
+
+
+# ----------------------------------------------------------------------------
+# SELL fast path: direct row-block accumulation, no prefetch, no one-hot.
+# ----------------------------------------------------------------------------
+
+def _dsc_sell_kernel(atoms_ref,           # (ROW_TILE, SLOT_TILE) int32
+                     scaled_ref,          # (ROW_TILE, SLOT_TILE) fp
+                     d_ref,               # (Na, Ntheta_p) fp, VMEM-resident
+                     y_ref):              # (ROW_TILE, Ntheta_p) output block
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    r, s = atoms_ref.shape
+    d_rows = d_ref[atoms_ref[...].reshape(-1)]              # (R*S, Ntheta_p)
+    contrib = d_rows * scaled_ref[...].reshape(-1)[:, None]  # daxpy slots
+    # slot [r, s] belongs to output row r by layout: reduce the slot axis,
+    # accumulate directly — the one-hot matmul of _dsc_kernel is gone.
+    y_ref[...] += contrib.reshape(r, s, -1).sum(axis=1).astype(y_ref.dtype)
+
+
+def dsc_sell_pallas(atoms: jax.Array, scaled: jax.Array,
+                    dictionary_padded: jax.Array, *, row_tile: int,
+                    slot_tile: int, interpret: bool = False) -> jax.Array:
+    """DSC over a SELL layout.  ``atoms``/``scaled`` are the dense
+    ``(n_rows_padded, width)`` slot arrays of ``formats/sell.py:SellPhi``
+    (``scaled = w[fibers] * values``, padding slots 0).  Returns
+    ``(n_rows_padded, Ntheta_padded)``; grid axis 0 IS the output block
+    index, axis 1 sweeps slot chunks into the resident block."""
+    n_rows_padded, width = atoms.shape
+    n_theta_p = dictionary_padded.shape[1]
+    grid = (n_rows_padded // row_tile, width // slot_tile)
+    return pl.pallas_call(
+        _dsc_sell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, slot_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((row_tile, slot_tile), lambda i, j: (i, j)),
+            pl.BlockSpec(dictionary_padded.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, n_theta_p), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_rows_padded, n_theta_p), dictionary_padded.dtype),
+        interpret=interpret,
+    )(atoms, scaled, dictionary_padded)

@@ -83,6 +83,57 @@ def make_dsc(phi_voxel_sorted: PhiTensor, dictionary: jax.Array,
     return matvec
 
 
+def make_dsc_sell(sell, dictionary: jax.Array, *,
+                  interpret: bool = True) -> Callable:
+    """matvec(w) -> (Nv, Ntheta) over a ``formats/sell.py:SellPhi`` (op="dsc").
+
+    No TilePlan, no prefetch operands: the layout's static slot arrays are
+    the whole plan (DESIGN.md §7)."""
+    if sell.op != "dsc":
+        raise ValueError(f"need a dsc-layout SellPhi, got op={sell.op!r}")
+    atoms = jnp.asarray(sell.atoms)
+    fibers = jnp.asarray(sell.others)
+    values = jnp.asarray(sell.values)
+    d_pad = pad_lanes(dictionary)
+    n_theta = dictionary.shape[1]
+    n_voxels = sell.n_voxels
+
+    @jax.jit
+    def matvec(w: jax.Array) -> jax.Array:
+        scaled = jnp.take(w, fibers) * values      # padding slots stay 0
+        y = dsc_kernel.dsc_sell_pallas(
+            atoms, scaled, d_pad, row_tile=sell.row_tile,
+            slot_tile=sell.slot_tile, interpret=interpret)
+        return y[:n_voxels, :n_theta]
+
+    return matvec
+
+
+def make_wc_sell(sell, dictionary: jax.Array, *,
+                 interpret: bool = True) -> Callable:
+    """rmatvec(Y) -> (Nf,) over a ``formats/sell.py:SellPhi`` (op="wc")."""
+    if sell.op != "wc":
+        raise ValueError(f"need a wc-layout SellPhi, got op={sell.op!r}")
+    atoms = jnp.asarray(sell.atoms)
+    voxels = jnp.asarray(sell.others)
+    values = jnp.asarray(sell.values)
+    d_pad = pad_lanes(dictionary)
+    n_fibers = sell.n_fibers
+
+    @jax.jit
+    def rmatvec(y: jax.Array) -> jax.Array:
+        y_pad = pad_lanes(y)
+        # coalesced XLA pre-gather of Y rows, one (rows_padded, W, T) stream;
+        # padding slots gather row 0 but carry value 0, so they are inert
+        yg = jnp.take(y_pad, voxels, axis=0)
+        w = wc_kernel.wc_sell_pallas(
+            atoms, yg, values, d_pad, row_tile=sell.row_tile,
+            slot_tile=sell.slot_tile, interpret=interpret)
+        return w.reshape(-1)[:n_fibers]
+
+    return rmatvec
+
+
 def make_wc(phi_fiber_sorted: PhiTensor, dictionary: jax.Array,
             plan: TilePlan, *, interpret: bool = True) -> Callable:
     """Returns rmatvec(Y) -> (Nf,) running the WC Pallas executor."""

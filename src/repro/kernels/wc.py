@@ -81,3 +81,53 @@ def wc_pallas(row_block: jax.Array, atoms_p: jax.Array, yg_p: jax.Array,
             (n_fib_blocks, fib_tile), dictionary_padded.dtype),
         interpret=interpret,
     )(row_block, atoms_p, yg_p, vals_p, local_row_p, dictionary_padded)
+
+
+# ----------------------------------------------------------------------------
+# SELL fast path: direct fiber-block accumulation, no prefetch, no one-hot
+# (DESIGN.md §7; layout from formats/sell.py with op="wc" — rows = fibers).
+# ----------------------------------------------------------------------------
+
+def _wc_sell_kernel(atoms_ref,            # (ROW_TILE, SLOT_TILE) int32
+                    yg_ref,               # (ROW_TILE, SLOT_TILE, Ntheta_p) fp
+                    vals_ref,             # (ROW_TILE, SLOT_TILE) fp
+                    d_ref,                # (Na, Ntheta_p) fp, VMEM-resident
+                    w_ref):               # (1, ROW_TILE) output block
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    r, s = atoms_ref.shape
+    d_rows = d_ref[atoms_ref[...].reshape(-1)]              # (R*S, Ntheta_p)
+    dots = jnp.sum(d_rows.reshape(r, s, -1) * yg_ref[...], axis=-1)
+    # slot [r, s] belongs to fiber row r by layout: reduce the slot axis.
+    w_ref[...] += (dots * vals_ref[...]).sum(axis=1)[None, :].astype(w_ref.dtype)
+
+
+def wc_sell_pallas(atoms: jax.Array, yg: jax.Array, vals: jax.Array,
+                   dictionary_padded: jax.Array, *, row_tile: int,
+                   slot_tile: int, interpret: bool = False) -> jax.Array:
+    """WC over a fiber-row SELL layout.  ``yg`` is the pre-gathered
+    ``(n_rows_padded, width, Ntheta_p)`` stream of Y rows (padding slots
+    carry value 0 so their gathered rows are inert).  Returns
+    ``(n_row_blocks, row_tile)`` partial weights (reshape + trim to Nf)."""
+    n_rows_padded, width = atoms.shape
+    n_theta_p = dictionary_padded.shape[1]
+    grid = (n_rows_padded // row_tile, width // slot_tile)
+    return pl.pallas_call(
+        _wc_sell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, slot_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((row_tile, slot_tile, n_theta_p),
+                         lambda i, j: (i, j, 0)),
+            pl.BlockSpec((row_tile, slot_tile), lambda i, j: (i, j)),
+            pl.BlockSpec(dictionary_padded.shape, lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, row_tile), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_rows_padded // row_tile, row_tile), dictionary_padded.dtype),
+        interpret=interpret,
+    )(atoms, yg, vals, dictionary_padded)

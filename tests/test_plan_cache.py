@@ -120,6 +120,53 @@ def test_second_planning_time_drops(tmp_path):
     np.testing.assert_array_equal(warm.row_block, cold.row_block)
 
 
+def test_size_cap_prunes_oldest(tmp_path):
+    """Writes past max_bytes evict oldest entries; newest always survives."""
+    import os
+    import time
+    cache = PlanCache(str(tmp_path), max_bytes=6000)
+    keys = []
+    for i in range(12):
+        ids = np.sort(np.random.default_rng(i).integers(0, 40, 300))
+        plan = plan_tiles(ids, 40, c_tile=32, row_tile=8)
+        key = tile_plan_key(ids, 40, c_tile=32, row_tile=8)
+        cache.put_tile_plan(key, plan)
+        keys.append(key)
+        os.utime(tmp_path / (key + ".npz"),
+                 (time.time() - 100 + i, time.time() - 100 + i))
+    files = list(tmp_path.glob("*.npz"))
+    total = sum(f.stat().st_size for f in files)
+    assert total <= 6000
+    assert len(files) < 12                        # something was evicted
+    assert cache.get_tile_plan(keys[-1]) is not None   # newest survives
+    assert cache.get_tile_plan(keys[0]) is None        # oldest evicted
+
+
+def test_cap_below_one_entry_keeps_newest(tmp_path):
+    """A cap smaller than a single entry must not disable the cache."""
+    cache = PlanCache(str(tmp_path), max_bytes=1)
+    ids, rows = _ids()
+    key = tile_plan_key(ids, rows, c_tile=32, row_tile=8)
+    cache.put_tile_plan(key, plan_tiles(ids, rows, c_tile=32, row_tile=8))
+    assert cache.get_tile_plan(key) is not None
+
+
+def test_no_cap_keeps_everything(tmp_path):
+    cache = PlanCache(str(tmp_path))              # max_bytes=None
+    for i in range(5):
+        ids = np.sort(np.random.default_rng(100 + i).integers(0, 40, 300))
+        cache.put_tile_plan(tile_plan_key(ids, 40, c_tile=32, row_tile=8),
+                            plan_tiles(ids, 40, c_tile=32, row_tile=8))
+    assert len(list(tmp_path.glob("*.npz"))) == 5
+
+
+def test_max_bytes_env_default(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "12345")
+    assert PlanCache(str(tmp_path)).max_bytes == 12345
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "not-an-int")
+    assert PlanCache(str(tmp_path)).max_bytes is None
+
+
 def test_compaction_changes_key_and_misses(tmp_path, tiny_problem):
     """Compacted phi has different index content -> clean cache miss."""
     from repro.core.restructure import compact_by_weight
