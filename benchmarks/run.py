@@ -9,7 +9,8 @@ import time
 from benchmarks import (table2_restructuring, table3_partitioning,
                         table4_opt_combos, table5_scaling,
                         table8_kernel_ladder, table9_param_sweep,
-                        table10_end2end, table11_batched, table12_formats)
+                        table10_end2end, table11_batched, table12_formats,
+                        table13_service)
 
 TABLES = {
     "table2": table2_restructuring,
@@ -21,6 +22,7 @@ TABLES = {
     "table10": table10_end2end,
     "table11": table11_batched,       # beyond-paper: multi-subject batching
     "table12": table12_formats,       # beyond-paper: Phi format comparison
+    "table13": table13_service,       # beyond-paper: serving under open-loop load
 }
 
 

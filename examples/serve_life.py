@@ -1,0 +1,92 @@
+"""Serve LiFE solves as a multi-tenant service — with a kill-and-resume demo.
+
+    PYTHONPATH=src python examples/serve_life.py [n_subjects]
+
+Walks the whole serving story (DESIGN.md §8):
+
+  1. jobs with different priorities, deadlines and formats are submitted
+     continuously; the scheduler buckets batch-compatible subjects into one
+     vmapped solve and time-slices between buckets,
+  2. every few ticks the service checkpoints all in-flight solver states,
+  3. the service is "killed" mid-solve and a fresh instance resumes every
+     job from the checkpoint — finishing with weights identical to an
+     uninterrupted run.
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.life import LifeConfig
+from repro.data.dmri import synth_cohort
+from repro.serve import LifeService
+
+N_ITERS = 60
+
+
+def main():
+    try:
+        n_subjects = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    except ValueError:
+        sys.exit(f"usage: {sys.argv[0]} [n_subjects]")
+
+    print(f"1. synthesizing {n_subjects}-subject cohort...")
+    cohort = synth_cohort(n_subjects, base_seed=0, n_fibers=256, n_theta=64,
+                          n_atoms=64, grid=(14, 14, 14))
+    cfg = LifeConfig(executor="opt", n_iters=N_ITERS,
+                     plan_cache_dir=tempfile.mkdtemp())
+
+    print("2. uninterrupted service run (reference)...")
+    ref = LifeService(cfg, slice_iters=10)
+    for i, p in enumerate(cohort):
+        # tenant 0 is latency-sensitive (deadline), tenant 1 is high
+        # priority, the last tenant wants the SELL fast path
+        ref.submit(p, job_id=f"tenant-{i}", n_iters=N_ITERS,
+                   priority=5 if i == 1 else 0,
+                   deadline=2.0 if i == 0 else None,
+                   format="sell" if i == n_subjects - 1 else "coo")
+    ref_results = ref.run()
+    for jid in sorted(ref_results):
+        w, losses = ref_results[jid]
+        print(f"   {jid}: final loss {losses[-1]:.5f}, "
+              f"{int((np.asarray(w) > 1e-6).sum())} fibers kept")
+
+    print("3. same jobs, but the service dies mid-solve...")
+    ckpt_dir = tempfile.mkdtemp()
+    svc = LifeService(cfg, ckpt_dir=ckpt_dir, checkpoint_every=1,
+                      slice_iters=10)
+    for i, p in enumerate(cohort):
+        svc.submit(p, job_id=f"tenant-{i}", n_iters=N_ITERS,
+                   priority=5 if i == 1 else 0,
+                   deadline=2.0 if i == 0 else None,
+                   format="sell" if i == n_subjects - 1 else "coo")
+    for _ in range(3):
+        svc.step()                       # a few time slices, checkpointed
+    done = {j.job_id: j.done for j in svc.scheduler.jobs()}
+    print(f"   progress at kill: {done}")
+    del svc                              # the crash
+
+    print("4. new service instance resumes from the checkpoint...")
+    svc2 = LifeService(cfg, ckpt_dir=ckpt_dir, checkpoint_every=1,
+                       slice_iters=10)
+    print(f"   resumable jobs: {list(svc2.resumable_jobs)}")
+    for i, p in enumerate(cohort):       # clients resubmit their data
+        svc2.submit(p, job_id=f"tenant-{i}",
+                    format="sell" if i == n_subjects - 1 else "coo")
+    results = svc2.run()
+
+    print("5. resumed weights vs uninterrupted run:")
+    for jid in sorted(results):
+        w_res, _ = results[jid]
+        w_ref, _ = ref_results[jid]
+        err = float(np.max(np.abs(np.asarray(w_res) - np.asarray(w_ref))))
+        print(f"   {jid}: max |dw| = {err:.2e}")
+        assert err <= 1e-6, f"{jid} diverged after resume"
+    print("   every tenant resumed bit-compatibly")
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,18 @@ def restore(ckpt_dir: str, step: Optional[int] = None
     return step, flat, manifest
 
 
+def load_latest(ckpt_dir: str
+                ) -> Optional[Tuple[int, Dict[str, np.ndarray], Dict[str, Any]]]:
+    """`restore` of the latest step, or None when no checkpoint exists.
+
+    The serving resume path: a freshly started service probes its checkpoint
+    directory and either adopts the in-flight solver states or starts empty —
+    without treating the cold-start case as an error."""
+    if latest_step(ckpt_dir) is None:
+        return None
+    return restore(ckpt_dir)
+
+
 def unflatten_like(template: Any, flat: Dict[str, np.ndarray]) -> Any:
     """Rebuild a pytree shaped like `template` from restored arrays."""
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)

@@ -184,36 +184,52 @@ class BatchedLifeEngine:
         d = self.dictionary
         dsc_fn, wc_fn = self._dsc_fn, self._wc_fn
 
-        def run_batch(phi_dsc, phi_wc, b, w0, *, n_iters: int):
+        def run_batch(phi_dsc, phi_wc, b, states, *, n_iters: int):
             def one_step(phi_v, phi_w, b_s, state):
                 return sbbnnls_step(lambda w: dsc_fn(phi_v, d, w),
                                     lambda y: wc_fn(phi_w, d, y), b_s, state)
 
-            def body(states, _):
-                new = jax.vmap(one_step)(phi_dsc, phi_wc, b, states)
+            def body(ss, _):
+                new = jax.vmap(one_step)(phi_dsc, phi_wc, b, ss)
                 return new, new.loss
 
-            s = w0.shape[0]
-            init = SbbnnlsState(
-                w=w0, it=jnp.zeros((s,), jnp.int32),
-                loss=jnp.zeros((s,), w0.dtype))
-            final, losses = jax.lax.scan(body, init, xs=None, length=n_iters)
-            return final.w, losses.T          # (S, Nf), (S, n_iters)
+            final, losses = jax.lax.scan(body, states, xs=None,
+                                         length=n_iters)
+            return final, losses.T            # states, (S, n_iters)
 
         return run_batch
 
     # -- driver --------------------------------------------------------------
+    def init_states(self, w0: Optional[jax.Array] = None) -> SbbnnlsState:
+        """Fresh per-subject solver states stacked along axis 0 (S, ...)."""
+        nf = self.problems[0].phi.n_fibers
+        if w0 is None:
+            w0 = jnp.ones((self.n_subjects, nf), self.dictionary.dtype)
+        s = w0.shape[0]
+        return SbbnnlsState(w=w0, it=jnp.zeros((s,), jnp.int32),
+                            loss=jnp.zeros((s,), w0.dtype))
+
+    def step(self, states: SbbnnlsState, k: int
+             ) -> Tuple[SbbnnlsState, np.ndarray]:
+        """Advance every subject's state by ``k`` iterations (stepped API).
+
+        Per-subject iteration counters ride in the stacked state, so subjects
+        admitted mid-flight (continuous batching) or restored from a
+        checkpoint keep their own Barzilai-Borwein parity — chained calls
+        match one uninterrupted run exactly.  Returns (states, (S, k) loss
+        trace)."""
+        new, losses = self._runner(self.phi_dsc, self.phi_wc, self.b,
+                                   states, n_iters=k)
+        return new, np.asarray(losses)
+
     def run(self, n_iters: Optional[int] = None,
             w0: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, np.ndarray]:
         """Solve all subjects; returns (W (S, Nf), losses (S, n_iters))."""
         n_iters = self.config.n_iters if n_iters is None else n_iters
-        nf = self.problems[0].phi.n_fibers
-        if w0 is None:
-            w0 = jnp.ones((self.n_subjects, nf), self.dictionary.dtype)
-        w, losses = self._runner(self.phi_dsc, self.phi_wc, self.b, w0,
-                                 n_iters=n_iters)
-        return w, np.asarray(losses)
+        final, losses = self._runner(self.phi_dsc, self.phi_wc, self.b,
+                                     self.init_states(w0), n_iters=n_iters)
+        return final.w, np.asarray(losses)
 
     def prune_stats(self, w_batch: jax.Array,
                     threshold: float = 1e-6) -> List[dict]:

@@ -37,7 +37,8 @@ import numpy as np
 from repro.core.plan_cache import PlanCache
 from repro.core.registry import REGISTRY, Executor, create_for_format
 from repro.core.restructure import compact_by_weight
-from repro.core.sbbnnls import nnls_loss, sbbnnls_run
+from repro.core.sbbnnls import (SbbnnlsState, nnls_loss, sbbnnls_init,
+                                sbbnnls_steps)
 from repro.core.std import PhiTensor
 from repro.data.dmri import LifeProblem
 
@@ -122,30 +123,45 @@ class LifeEngine:
         return self.cache.stats
 
     # -- driver --------------------------------------------------------------
+    def init_state(self, w0: Optional[jax.Array] = None) -> SbbnnlsState:
+        """Fresh solver state (all-ones start unless ``w0`` is given)."""
+        nf = self.problem.phi.n_fibers
+        w = jnp.ones((nf,), self.problem.dictionary.dtype) if w0 is None else w0
+        return sbbnnls_init(w)
+
+    def step(self, state: SbbnnlsState, k: int
+             ) -> Tuple[SbbnnlsState, np.ndarray]:
+        """Advance ``state`` by ``k`` SBBNNLS iterations (stepped API).
+
+        State in -> k iters -> state out; the iteration counter rides in the
+        state, so chained calls reproduce one uninterrupted run exactly.
+        The serving scheduler time-slices long solves through this."""
+        new, ls = sbbnnls_steps(self.matvec, self.rmatvec, self.problem.b,
+                                state, k)
+        return new, np.asarray(ls)
+
     def run(self, n_iters: Optional[int] = None,
             w0: Optional[jax.Array] = None) -> Tuple[jax.Array, np.ndarray]:
         """Run SBBNNLS with optional periodic weight compaction."""
         cfg = self.config
         n_iters = cfg.n_iters if n_iters is None else n_iters
-        nf = self.problem.phi.n_fibers
-        w = jnp.ones((nf,), self.problem.dictionary.dtype) if w0 is None else w0
+        state = self.init_state(w0)
         losses: List[np.ndarray] = []
         chunk = cfg.compact_every if cfg.compact_every > 0 else n_iters
         done = 0
         while done < n_iters:
             k = min(chunk, n_iters - done)
-            state, ls = sbbnnls_run(self.matvec, self.rmatvec,
-                                    self.problem.b, w, k)
-            w = state.w
-            losses.append(np.asarray(ls))
+            state, ls = self.step(state, k)
+            losses.append(ls)
             done += k
             if cfg.compact_every > 0 and done < n_iters:
                 t0 = time.perf_counter()
-                compacted = compact_by_weight(self.phi, w, cfg.compact_threshold)
+                compacted = compact_by_weight(self.phi, state.w,
+                                              cfg.compact_threshold)
                 if compacted.n_coeffs < self.phi.n_coeffs:
                     self._build(compacted)
                 self.inspector_seconds += time.perf_counter() - t0
-        return w, np.concatenate(losses)
+        return state.w, np.concatenate(losses)
 
     def loss(self, w: jax.Array) -> float:
         return float(nnls_loss(self.matvec, self.problem.b, w))

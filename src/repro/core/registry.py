@@ -72,21 +72,44 @@ ExecutorFactory = Callable[..., Executor]
 
 
 class ExecutorRegistry:
-    """Name -> factory mapping with decorator registration."""
+    """Name -> factory mapping with decorator registration.
+
+    ``consumes`` records which registered Phi layout a factory materializes
+    and runs (every factory *takes* the canonical COO tensor; this names the
+    layout it executes over).  The serving scheduler buckets jobs by it, and
+    the conformance matrix (tests/test_conformance.py) derives the full set
+    of executor x format pairs it must hold to the oracle from it — so a new
+    executor is covered by the contract the moment it registers.
+    """
 
     def __init__(self):
         self._factories: Dict[str, ExecutorFactory] = {}
+        self._consumes: Dict[str, str] = {}
 
-    def register(self, name: str) -> Callable[[ExecutorFactory], ExecutorFactory]:
+    def register(self, name: str, *, consumes: str = "coo"
+                 ) -> Callable[[ExecutorFactory], ExecutorFactory]:
         def deco(factory: ExecutorFactory) -> ExecutorFactory:
             if name in self._factories:
                 raise ValueError(f"executor {name!r} already registered")
             self._factories[name] = factory
+            self._consumes[name] = consumes
             return factory
         return deco
 
     def names(self) -> Tuple[str, ...]:
         return tuple(sorted(self._factories))
+
+    def consumes(self, name: str) -> str:
+        """Phi layout executor ``name`` runs over ("coo"/"sell"/"alto")."""
+        if name not in self._consumes:
+            raise ValueError(
+                f"executor must be one of {self.names()}, got {name!r}")
+        return self._consumes[name]
+
+    def executors_for_format(self, format_name: str) -> Tuple[str, ...]:
+        """All registered executors that run over ``format_name``."""
+        return tuple(sorted(n for n, f in self._consumes.items()
+                            if f == format_name))
 
     def __contains__(self, name: str) -> bool:
         return name in self._factories
@@ -179,7 +202,7 @@ def _make_kernel(phi, problem, config, cache) -> Executor:
         plans=dict(dsc_tiles=dsc_plan, wc_tiles=wc_plan))
 
 
-@REGISTRY.register("kernel-sell")
+@REGISTRY.register("kernel-sell", consumes="sell")
 def _make_kernel_sell(phi, problem, config, cache) -> Executor:
     """Pallas executors over the blocked-ELL layout (formats/sell.py).
 
@@ -204,7 +227,7 @@ def _make_kernel_sell(phi, problem, config, cache) -> Executor:
         plans=dict(sell_dsc=sell_dsc, sell_wc=sell_wc))
 
 
-@REGISTRY.register("alto")
+@REGISTRY.register("alto", consumes="alto")
 def _make_alto(phi, problem, config, cache) -> Executor:
     """Both ops over one ALTO-ordered Phi copy (formats/alto.py).
 

@@ -15,7 +15,6 @@ the paper's accounting (§2.2).
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Callable, NamedTuple, Tuple
 
@@ -72,19 +71,34 @@ def _safe_div(num: Array, den: Array) -> Array:
     return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
 
 
+def sbbnnls_init(w0: Array) -> SbbnnlsState:
+    """Fresh solver state at iteration 0 (the stepped-API entry point)."""
+    return SbbnnlsState(w=w0, it=jnp.asarray(0, jnp.int32),
+                        loss=jnp.asarray(0.0, w0.dtype))
+
+
 @partial(jax.jit, static_argnames=("matvec", "rmatvec", "n_iters"))
+def sbbnnls_steps(matvec: MatVec, rmatvec: MatVec, b: Array,
+                  state: SbbnnlsState, n_iters: int
+                  ) -> Tuple[SbbnnlsState, Array]:
+    """Advance an existing state by n_iters iterations (state in -> k iters
+    -> state out).  Because ``state.it`` rides along, the Barzilai-Borwein
+    odd/even alternation continues where it left off: composing
+    ``k x (n/k)`` calls is exactly one ``n``-iteration run, which is what
+    makes time-sliced and checkpoint-resumed solves bit-compatible with
+    uninterrupted ones (serve/ relies on this)."""
+    def body(s, _):
+        new = sbbnnls_step(matvec, rmatvec, b, s)
+        return new, new.loss
+
+    final, losses = jax.lax.scan(body, state, xs=None, length=n_iters)
+    return final, losses
+
+
 def sbbnnls_run(matvec: MatVec, rmatvec: MatVec, b: Array, w0: Array,
                 n_iters: int) -> Tuple[SbbnnlsState, Array]:
     """Run n_iters iterations under lax.scan; returns (final state, losses)."""
-    init = SbbnnlsState(w=w0, it=jnp.asarray(0, jnp.int32),
-                        loss=jnp.asarray(0.0, w0.dtype))
-
-    def body(state, _):
-        new = sbbnnls_step(matvec, rmatvec, b, state)
-        return new, new.loss
-
-    final, losses = jax.lax.scan(body, init, xs=None, length=n_iters)
-    return final, losses
+    return sbbnnls_steps(matvec, rmatvec, b, sbbnnls_init(w0), n_iters)
 
 
 def nnls_loss(matvec: MatVec, b: Array, w: Array) -> Array:

@@ -1,0 +1,14 @@
+"""Multi-tenant LiFE serving subsystem (DESIGN.md §8).
+
+Turns the three engines and two caches of the preceding layers into a
+service: jobs arrive continuously, compatible subjects are micro-batched
+through :class:`~repro.core.batched.BatchedLifeEngine`, long solves are
+time-sliced fairly across tenants through the stepped SBBNNLS API, and every
+in-flight solver state survives a kill via :mod:`repro.checkpoint.manager`.
+"""
+from repro.serve.scheduler import (BATCHABLE_FORMATS, Job, Scheduler,
+                                   dataset_key)
+from repro.serve.service import LifeService
+
+__all__ = ["BATCHABLE_FORMATS", "Job", "LifeService", "Scheduler",
+           "dataset_key"]

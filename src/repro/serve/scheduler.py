@@ -1,0 +1,313 @@
+"""Job queue + micro-batch scheduler for multi-tenant LiFE solves.
+
+The serving problem (DESIGN.md §8): SBBNNLS solves run for hundreds of
+iterations, subjects arrive continuously, and the hardware is best used
+batched — so the scheduler must (a) group compatible subjects into one
+vmapped computation, (b) admit late arrivals without restarting anyone, and
+(c) share the device fairly between tenants with different priorities and
+deadlines.  All three reduce to the stepped solver API
+(:func:`repro.core.sbbnnls.sbbnnls_steps`): state in -> k iterations ->
+state out, with the Barzilai-Borwein parity riding in the state, so slicing
+and re-batching never change the trajectory.
+
+Bucketing policy
+----------------
+A job lands in the bucket keyed by its *batch-compatibility class*:
+
+  (Nv, Nf, Ntheta, dictionary digest, format)
+
+Jobs in one bucket can be stacked into a single
+:class:`~repro.core.batched.BatchedLifeEngine` (same geometry, same shared
+dictionary; coefficient counts may differ — the engine pads).  The key uses
+the *requested* format: jobs asking for the same vmappable format
+(``BATCHABLE_FORMATS``: coo, alto, or "auto" — which resolves inside the
+batched engine) share one bucket engine, while an "auto" job and an
+explicit "coo" job stay in separate buckets even when selection would pick
+coo (resolving at submit would mean running format selection on the intake
+path).  SELL's per-subject static slot shapes cannot stack, so
+``format="sell"`` jobs get solo buckets running a
+:class:`~repro.core.life.LifeEngine` behind the same stepped interface.
+
+Continuous batching
+-------------------
+Bucket membership is re-evaluated every tick: queued arrivals are admitted,
+finished jobs leave, and the bucket engine is rebuilt only when the member
+set changed.  Rebuilds are cheap by construction — every inspector product
+(FormatPlan, autotune choice, tile plan) is content-addressed in the shared
+:class:`~repro.core.plan_cache.PlanCache`, so re-batching the same datasets
+hits the cache rather than re-running selection.  Solver states are carried
+over verbatim: a subject that already ran 80 iterations keeps its weights
+and parity when a newcomer joins the stack.
+
+Time-slicing
+------------
+Each ``tick()`` serves the most urgent bucket for at most ``slice_iters``
+iterations: earliest deadline first, then highest priority, then the bucket
+that has been served least (so starvation is bounded by the slice length).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched import BatchedLifeEngine
+from repro.core.life import LifeConfig, LifeEngine
+from repro.core.plan_cache import PlanCache
+from repro.core.sbbnnls import SbbnnlsState
+from repro.data.dmri import LifeProblem
+
+#: formats whose stacked operands run under vmap — eligible for shared
+#: micro-batch buckets ("auto" restricts itself to the vmappable subset
+#: inside BatchedLifeEngine; SELL widths are per-subject static shapes)
+BATCHABLE_FORMATS = ("auto", "coo", "alto")
+
+_SOLO_FORMATS = ("sell",)
+
+
+def dataset_key(problem: LifeProblem) -> str:
+    """Content digest of one subject's full dataset (Phi + signal + dict).
+
+    Two submissions with byte-identical data share the digest; any change —
+    different seed, compaction, new acquisition — misses cleanly.  The
+    service uses it to (a) verify a resumed job is being re-attached to the
+    same data and (b) key FormatPlan/plan-cache reuse across requests.
+    """
+    h = hashlib.sha256()
+    phi = problem.phi
+    h.update(np.int64([phi.n_atoms, phi.n_voxels, phi.n_fibers]).tobytes())
+    for arr in (phi.atoms, phi.voxels, phi.fibers):
+        h.update(np.ascontiguousarray(np.asarray(arr), np.int64).tobytes())
+    for arr in (phi.values, problem.b, problem.dictionary):
+        h.update(np.ascontiguousarray(np.asarray(arr), np.float64).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _dict_digest(problem: LifeProblem) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(np.asarray(problem.dictionary),
+                             np.float64).tobytes()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class Job:
+    """One tenant's solve request plus its in-flight progress."""
+
+    job_id: str
+    problem: LifeProblem
+    n_iters: int
+    priority: int = 0                     # higher runs sooner (tie-break)
+    deadline: Optional[float] = None      # absolute time.monotonic() seconds
+    format: str = "auto"
+    submitted_at: float = 0.0
+    # -- progress (owned by the scheduler) --------------------------------
+    state: Optional[SbbnnlsState] = None
+    done: int = 0                         # iterations completed
+    losses: List[np.ndarray] = dataclasses.field(default_factory=list)
+    status: str = "queued"                # queued | running | done
+    dataset: str = ""                     # content digest, set on submit
+    dict_digest: str = ""                 # dictionary digest (bucket key part)
+    finished_at: Optional[float] = None
+
+    @property
+    def remaining(self) -> int:
+        return max(0, self.n_iters - self.done)
+
+    def result(self) -> Tuple[jnp.ndarray, np.ndarray]:
+        """(final weights (Nf,), per-iteration loss trace)."""
+        if self.state is None:
+            raise RuntimeError(f"job {self.job_id!r} has not run yet")
+        losses = (np.concatenate(self.losses) if self.losses
+                  else np.zeros((0,)))
+        return self.state.w, losses
+
+
+class _Bucket:
+    """Jobs sharing one batch-compatibility class + their cached engine."""
+
+    def __init__(self, key: Tuple, fmt: str, arrival: int):
+        self.key = key
+        self.format = fmt
+        self.solo = fmt in _SOLO_FORMATS
+        self.jobs: List[Job] = []
+        self.iters_served = 0             # virtual time for fairness
+        self.arrival = arrival
+        self._engine = None
+        self._engine_sig: Optional[Tuple[str, ...]] = None
+
+    # -- urgency ordering --------------------------------------------------
+    def urgency(self) -> Tuple:
+        deadline = min((j.deadline for j in self.jobs
+                        if j.deadline is not None), default=float("inf"))
+        priority = max(j.priority for j in self.jobs)
+        return (deadline, -priority, self.iters_served, self.arrival)
+
+    # -- engine construction (memoized on the member set) ------------------
+    def _config(self, base: LifeConfig) -> LifeConfig:
+        return dataclasses.replace(base, format=self.format)
+
+    def engine(self, base: LifeConfig, cache: PlanCache):
+        sig = tuple(j.job_id for j in self.jobs)
+        if self._engine is None or self._engine_sig != sig:
+            cfg = self._config(base)
+            if self.solo:
+                self._engine = LifeEngine(self.jobs[0].problem, cfg, cache)
+            else:
+                self._engine = BatchedLifeEngine(
+                    [j.problem for j in self.jobs], cfg, cache)
+            self._engine_sig = sig
+        return self._engine
+
+    # -- the time slice ----------------------------------------------------
+    def run_slice(self, base: LifeConfig, cache: PlanCache,
+                  slice_iters: int) -> List[Job]:
+        """Advance every member by k <= slice_iters iterations; a member
+        whose remaining budget is below k bounds the whole slice, so no job
+        ever overruns its requested n_iters.  Returns members that finished.
+        """
+        engine = self.engine(base, cache)
+        k = min([slice_iters] + [j.remaining for j in self.jobs])
+        if self.solo:
+            job = self.jobs[0]
+            if job.state is None:
+                job.state = engine.init_state()
+            if k:
+                job.state, ls = engine.step(job.state, k)
+                job.losses.append(ls)
+                job.done += k
+        else:
+            if any(j.state is None for j in self.jobs):
+                fresh = engine.init_states()
+                for i, j in enumerate(self.jobs):
+                    if j.state is None:
+                        j.state = SbbnnlsState(w=fresh.w[i], it=fresh.it[i],
+                                               loss=fresh.loss[i])
+            states = SbbnnlsState(
+                w=jnp.stack([j.state.w for j in self.jobs]),
+                it=jnp.stack([j.state.it for j in self.jobs]),
+                loss=jnp.stack([j.state.loss for j in self.jobs]))
+            if k:
+                states, losses = engine.step(states, k)
+            for i, job in enumerate(self.jobs):
+                job.state = SbbnnlsState(w=states.w[i], it=states.it[i],
+                                         loss=states.loss[i])
+                if k:
+                    job.losses.append(losses[i])
+                    job.done += k
+        self.iters_served += k * len(self.jobs)
+        finished = [j for j in self.jobs if j.remaining == 0]
+        for job in finished:
+            job.status = "done"
+            job.finished_at = time.monotonic()
+        self.jobs = [j for j in self.jobs if j.remaining > 0]
+        return finished
+
+
+class Scheduler:
+    """Continuous-batching micro-batch scheduler over stepped solves."""
+
+    def __init__(self, config: Optional[LifeConfig] = None, *,
+                 slice_iters: int = 16, cache: Optional[PlanCache] = None):
+        self.config = config if config is not None else LifeConfig()
+        if getattr(self.config, "compact_every", 0) > 0:
+            # silently never compacting would be worse than refusing: the
+            # stepped path drives engines directly and bypasses the
+            # compaction loop in LifeEngine.run()
+            raise ValueError(
+                "weight compaction (compact_every > 0) is not supported by "
+                "the serving scheduler; run those solves through LifeEngine")
+        self.cache = cache if cache is not None else PlanCache(
+            self.config.plan_cache_dir, self.config.plan_cache_max_bytes)
+        self.slice_iters = slice_iters
+        self._queue: List[Job] = []
+        self._buckets: Dict[Tuple, _Bucket] = {}
+        self._jobs: Dict[str, Job] = {}
+        self._arrivals = itertools.count()
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, job: Job) -> Job:
+        if job.job_id in self._jobs:
+            raise ValueError(f"job id {job.job_id!r} already submitted")
+        if "/" in job.job_id:
+            raise ValueError("job ids must not contain '/' "
+                             "(they key checkpoint array paths)")
+        if job.format not in BATCHABLE_FORMATS + _SOLO_FORMATS:
+            raise ValueError(
+                f"format must be one of "
+                f"{BATCHABLE_FORMATS + _SOLO_FORMATS}, got {job.format!r}")
+        if not job.dataset:
+            job.dataset = dataset_key(job.problem)
+        if not job.dict_digest:
+            job.dict_digest = _dict_digest(job.problem)
+        if not job.submitted_at:
+            job.submitted_at = time.monotonic()
+        self._jobs[job.job_id] = job
+        self._queue.append(job)
+        return job
+
+    def _bucket_key(self, job: Job) -> Tuple:
+        phi = job.problem.phi
+        return (phi.n_voxels, phi.n_fibers, job.problem.dictionary.shape[1],
+                job.dict_digest, job.format,
+                # solo formats never share an engine
+                job.job_id if job.format in _SOLO_FORMATS else "")
+
+    def _admit(self) -> None:
+        """Move queued jobs into buckets — the continuous-batching step:
+        arrivals join their bucket's *next* micro-batch; nothing in flight
+        restarts (states persist across the engine rebuild)."""
+        for job in self._queue:
+            key = self._bucket_key(job)
+            if key not in self._buckets:
+                self._buckets[key] = _Bucket(key, job.format,
+                                             next(self._arrivals))
+            self._buckets[key].jobs.append(job)
+            job.status = "running"
+        self._queue.clear()
+
+    # -- the loop ----------------------------------------------------------
+    def tick(self) -> List[Job]:
+        """Admit arrivals, serve the most urgent bucket one time slice.
+
+        Returns the jobs that completed during this tick."""
+        self._admit()
+        live = [b for b in self._buckets.values() if b.jobs]
+        if not live:
+            return []
+        bucket = min(live, key=_Bucket.urgency)
+        finished = bucket.run_slice(self.config, self.cache,
+                                    self.slice_iters)
+        if not bucket.jobs:
+            del self._buckets[bucket.key]
+        return finished
+
+    def active(self) -> bool:
+        return bool(self._queue) or any(b.jobs
+                                        for b in self._buckets.values())
+
+    def run_until_idle(self, max_ticks: Optional[int] = None) -> List[Job]:
+        """Drive tick() until every submitted job completed."""
+        finished: List[Job] = []
+        ticks = 0
+        while self.active():
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+            finished.extend(self.tick())
+            ticks += 1
+        return finished
+
+    # -- introspection -----------------------------------------------------
+    def job(self, job_id: str) -> Job:
+        return self._jobs[job_id]
+
+    def jobs(self) -> Sequence[Job]:
+        return list(self._jobs.values())
+
+    def in_flight(self) -> List[Job]:
+        """Jobs admitted or queued but not finished (checkpoint targets)."""
+        return [j for j in self._jobs.values() if j.status != "done"]

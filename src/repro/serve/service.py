@@ -1,0 +1,213 @@
+"""LifeService: the serving front — submit / drive / checkpoint / resume.
+
+Wraps :class:`~repro.serve.scheduler.Scheduler` with the durability story
+(DESIGN.md §8.3): every ``checkpoint_every`` ticks the service snapshots all
+in-flight solver states through :mod:`repro.checkpoint.manager` (atomic
+rename, retention, the same machinery training jobs use).  A killed service
+restarts, probes its checkpoint directory, and re-adopts each solve at the
+exact iteration it left off — bit-compatibly, because a
+:class:`~repro.core.sbbnnls.SbbnnlsState` is the *complete* solver state
+(weights + iteration parity + last loss) and float arrays round-trip ``.npz``
+losslessly.
+
+Resume protocol: solve *data* is not checkpointed (at scale it lives in the
+dataset store; here the client resubmits it).  The checkpoint manifest
+records each job's dataset digest; on resubmission with a known ``job_id``
+the service verifies the digest matches before re-attaching the restored
+state, so a resumed job can never silently continue on different data.
+
+Plan reuse across restarts is free: the scheduler's engines share one
+persistent :class:`~repro.core.plan_cache.PlanCache`, keyed by dataset
+content — a restarted service rebuilds its engines from cached FormatPlans /
+autotune choices / tile plans instead of re-measuring.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.core.life import LifeConfig
+from repro.core.plan_cache import PlanCache
+from repro.core.sbbnnls import SbbnnlsState
+from repro.data.dmri import LifeProblem
+from repro.serve.scheduler import Job, Scheduler, dataset_key
+
+
+class LifeService:
+    """Multi-tenant solve service with checkpointed, resumable jobs."""
+
+    def __init__(self, config: Optional[LifeConfig] = None, *,
+                 ckpt_dir: Optional[str] = None, checkpoint_every: int = 4,
+                 slice_iters: int = 16, keep: int = 3,
+                 cache: Optional[PlanCache] = None):
+        self.config = config if config is not None else LifeConfig()
+        self.scheduler = Scheduler(self.config, slice_iters=slice_iters,
+                                   cache=cache)
+        self.ckpt_dir = ckpt_dir
+        self.checkpoint_every = checkpoint_every
+        self.keep = keep
+        self._tick = 0
+        self._completed: Dict[str, Job] = {}
+        # job_id -> (restored arrays, manifest meta) awaiting resubmission
+        self._resumable: Dict[str, Tuple[dict, dict]] = {}
+        if ckpt_dir:
+            self._load_resumable(ckpt_dir)
+
+    # -- resume ------------------------------------------------------------
+    def _load_resumable(self, ckpt_dir: str) -> None:
+        latest = ckpt.load_latest(ckpt_dir)
+        if latest is None:
+            return
+        step, flat, manifest = latest
+        self._tick = step
+        for job_id, meta in manifest.get("jobs", {}).items():
+            arrays = {k.split(ckpt.SEP, 1)[1]: v for k, v in flat.items()
+                      if k.split(ckpt.SEP, 1)[0] == job_id}
+            if {"w", "it", "loss"} <= set(arrays):
+                self._resumable[job_id] = (arrays, meta)
+
+    @property
+    def resumable_jobs(self) -> Tuple[str, ...]:
+        """Job ids waiting to be re-adopted by a matching resubmission."""
+        return tuple(sorted(self._resumable))
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, problem: LifeProblem, *, job_id: Optional[str] = None,
+               n_iters: Optional[int] = None, priority: Optional[int] = None,
+               deadline: Optional[float] = None,
+               format: Optional[str] = None) -> str:
+        """Queue one solve; returns its job id.
+
+        ``deadline`` is seconds from now (converted to an absolute monotonic
+        time for EDF ordering).  If ``job_id`` names a checkpointed solve,
+        the restored state is re-attached — after verifying the resubmitted
+        data's digest matches the one recorded at checkpoint time.  On
+        resume, arguments the caller passes explicitly win over the
+        checkpointed values (extend a job with a larger ``n_iters``, bump
+        its ``priority``, set a fresh ``deadline``); omitted ones are
+        restored from the checkpoint, including the deadline's remaining
+        budget.  The format is the exception: the state's trajectory is only
+        reproducible under the format it ran on, so a conflicting explicit
+        ``format`` is an error rather than a silent override."""
+        if job_id is None:
+            taken = ({j.job_id for j in self.scheduler.jobs()}
+                     | set(self._completed) | set(self._resumable))
+            n = len(taken)
+            while f"job-{n}" in taken:
+                n += 1
+            job_id = f"job-{n}"
+        now = time.monotonic()
+        job = Job(job_id=job_id, problem=problem,
+                  n_iters=self.config.n_iters if n_iters is None else n_iters,
+                  priority=0 if priority is None else priority,
+                  deadline=None if deadline is None else now + deadline,
+                  format=self.config.format if format is None else format,
+                  submitted_at=now, dataset=dataset_key(problem))
+        if job_id in self._resumable:
+            arrays, meta = self._resumable[job_id]
+            if meta.get("dataset") != job.dataset:
+                raise ValueError(
+                    f"resume of job {job_id!r} rejected: resubmitted data "
+                    f"digest {job.dataset} != checkpointed "
+                    f"{meta.get('dataset')}")
+            ck_format = str(meta.get("format", job.format))
+            if format is not None and format != ck_format:
+                raise ValueError(
+                    f"resume of job {job_id!r} rejected: checkpointed state "
+                    f"ran under format {ck_format!r}, resubmitted with "
+                    f"{format!r}")
+            # validation passed — consume the entry and adopt the state
+            del self._resumable[job_id]
+            job.format = ck_format
+            job.state = SbbnnlsState(w=jnp.asarray(arrays["w"]),
+                                     it=jnp.asarray(arrays["it"]),
+                                     loss=jnp.asarray(arrays["loss"]))
+            job.done = int(meta["done"])
+            # explicit caller arguments win over checkpointed values
+            if n_iters is None:
+                job.n_iters = int(meta.get("n_iters", job.n_iters))
+            if priority is None:
+                job.priority = int(meta.get("priority", 0))
+            if deadline is None and meta.get("deadline_remaining") is not None:
+                job.deadline = now + float(meta["deadline_remaining"])
+            if "losses" in arrays:
+                job.losses = [np.asarray(arrays["losses"])]
+        self.scheduler.submit(job)
+        return job_id
+
+    # -- driving -----------------------------------------------------------
+    def step(self) -> List[Job]:
+        """One scheduler tick + periodic checkpoint; returns completions."""
+        finished = self.scheduler.tick()
+        self._tick += 1
+        for job in finished:
+            self._completed[job.job_id] = job
+        if (self.ckpt_dir and self.checkpoint_every > 0
+                and self._tick % self.checkpoint_every == 0):
+            self.checkpoint()
+        return finished
+
+    def run(self, max_ticks: Optional[int] = None
+            ) -> Dict[str, Tuple[jnp.ndarray, np.ndarray]]:
+        """Drive until every job completed (or ``max_ticks`` elapsed);
+        returns {job_id: (weights, loss trace)} for all completed jobs."""
+        ticks = 0
+        while self.scheduler.active():
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+            self.step()
+            ticks += 1
+        if self.ckpt_dir:
+            self.checkpoint()                 # never exit with unsaved state
+        return {jid: job.result() for jid, job in self._completed.items()}
+
+    # -- durability --------------------------------------------------------
+    def checkpoint(self) -> Optional[str]:
+        """Snapshot every solver state: in-flight *and* completed (atomic,
+        retained).  Completed jobs stay in the snapshot so a kill between a
+        job finishing and the client reading its result loses nothing — a
+        resubmission re-adopts the final state and completes instantly
+        instead of re-running the whole solve."""
+        if not self.ckpt_dir:
+            return None
+        tree: Dict[str, Dict[str, np.ndarray]] = {}
+        meta: Dict[str, dict] = {}
+        now = time.monotonic()
+        for job in (self.scheduler.in_flight()
+                    + list(self._completed.values())):
+            if job.state is None:
+                continue                      # queued, never ran: nothing yet
+            entry = {"w": np.asarray(job.state.w),
+                     "it": np.asarray(job.state.it),
+                     "loss": np.asarray(job.state.loss)}
+            if job.losses:
+                entry["losses"] = np.concatenate(job.losses)
+            tree[job.job_id] = entry
+            meta[job.job_id] = dict(
+                done=job.done, n_iters=job.n_iters, priority=job.priority,
+                format=job.format, dataset=job.dataset,
+                # deadlines are monotonic-clock absolutes that don't survive
+                # a restart; persist the remaining budget instead
+                deadline_remaining=(None if job.deadline is None
+                                    else job.deadline - now))
+        return ckpt.save(self.ckpt_dir, self._tick, tree,
+                         meta={"jobs": meta}, keep=self.keep)
+
+    # -- introspection -----------------------------------------------------
+    def result(self, job_id: str) -> Tuple[jnp.ndarray, np.ndarray]:
+        if job_id in self._completed:
+            return self._completed[job_id].result()
+        return self.scheduler.job(job_id).result()
+
+    def status(self, job_id: str) -> str:
+        if job_id in self._completed:
+            return "done"
+        return self.scheduler.job(job_id).status
+
+    @property
+    def cache_stats(self):
+        return self.scheduler.cache.stats

@@ -1,0 +1,96 @@
+"""Conformance matrix: every executor x format pair vs the naive oracle.
+
+Per-subsystem suites (test_kernels, test_formats) validate each code version
+against its own reference; this matrix is the cross-cutting contract — every
+pair the registry declares valid (``REGISTRY.consumes``) must produce the
+same matvec/rmatvec as the dense oracle, and full SBBNNLS trajectories must
+agree across executors.  A new executor or format is covered the moment it
+registers: the parametrization is derived from the registries at import
+time, so drift between subsystems fails here even when each subsystem's own
+tests pass.
+
+This is the contract new executors/formats must pass (README "Serving").
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.life import LifeConfig, LifeEngine
+from repro.core.plan_cache import PlanCache
+from repro.core.registry import REGISTRY, create_for_format
+from repro.formats import format_names
+
+#: every (executor, format) pair registered at head — REGISTRY.consumes is
+#: the single source of truth, so this list grows with the registries
+MATRIX = [(ex, fmt) for fmt in format_names()
+          for ex in REGISTRY.executors_for_format(fmt)]
+
+_CFG = LifeConfig(executor="opt", c_tile=64, row_tile=8, slot_tile=16,
+                  plan_cache_dir="")
+
+
+def _make_executor(name, fmt, problem):
+    cfg = dataclasses.replace(_CFG, executor=name, format=fmt)
+    if fmt == "coo":
+        return REGISTRY.create(name, problem.phi, problem, cfg, PlanCache(""))
+    return create_for_format(problem.phi, problem, cfg, PlanCache(""))
+
+
+def test_matrix_covers_whole_registry():
+    """Every registered executor appears in exactly one format row."""
+    assert sorted(ex for ex, _ in MATRIX) == sorted(REGISTRY.names())
+    assert {fmt for _, fmt in MATRIX} == set(format_names())
+
+
+@pytest.mark.parametrize("executor,fmt", MATRIX)
+def test_matvec_rmatvec_match_oracle(executor, fmt, tiny_problem,
+                                     tiny_dense, rng):
+    """DSC and WC of every pair agree with the dense oracle."""
+    p = tiny_problem
+    ex = _make_executor(executor, fmt, p)
+    m = np.asarray(tiny_dense, np.float64)          # (Nv*Ntheta, Nf)
+    n_theta = p.dictionary.shape[1]
+
+    w = jnp.asarray(rng.uniform(0, 1, p.phi.n_fibers), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(p.phi.n_voxels, n_theta)), jnp.float32)
+
+    got_mv = np.asarray(ex.matvec(w), np.float64).reshape(-1)
+    want_mv = m @ np.asarray(w, np.float64)
+    np.testing.assert_allclose(got_mv, want_mv, rtol=2e-4, atol=2e-5,
+                               err_msg=f"{executor}/{fmt} matvec")
+
+    got_rmv = np.asarray(ex.rmatvec(y), np.float64)
+    want_rmv = m.T @ np.asarray(y, np.float64).reshape(-1)
+    np.testing.assert_allclose(got_rmv, want_rmv, rtol=2e-4, atol=2e-5,
+                               err_msg=f"{executor}/{fmt} rmatvec")
+
+
+@pytest.mark.parametrize("executor,fmt", MATRIX)
+def test_sbbnnls_trajectories_match(executor, fmt, tiny_problem):
+    """Full solver trajectories agree across every executor x format pair
+    (the oracle is the naive scatter executor on canonical COO)."""
+    p = tiny_problem
+    base = LifeEngine(p, dataclasses.replace(_CFG, executor="naive",
+                                             n_iters=8))
+    w_ref, l_ref = base.run()
+
+    cfg = dataclasses.replace(_CFG, executor=executor, format=fmt, n_iters=8)
+    w, losses = LifeEngine(p, cfg).run()
+    np.testing.assert_allclose(losses, l_ref, rtol=2e-3,
+                               err_msg=f"{executor}/{fmt} losses")
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=2e-2,
+                               atol=2e-3, err_msg=f"{executor}/{fmt} weights")
+
+
+def test_invalid_pairs_are_rejected():
+    """A format request never silently runs on a mismatched executor:
+    non-COO formats force their own executor through create_for_format."""
+    from repro.formats import select as fsel
+    assert fsel.executor_for("sell", _CFG) == "kernel-sell"
+    assert fsel.executor_for("alto", _CFG) == "alto"
+    # COO defers to the configured executor
+    assert fsel.executor_for("coo", _CFG) == _CFG.executor
+    with pytest.raises(ValueError):
+        fsel.executor_for("csr", _CFG)

@@ -5,7 +5,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.life import LifeEngine, LifeConfig
-from repro.core.sbbnnls import projected_gradient, sbbnnls_run
+from repro.core.sbbnnls import (projected_gradient, sbbnnls_init,
+                                sbbnnls_run, sbbnnls_steps)
 from repro.core.std import materialize_dense
 
 
@@ -82,6 +83,81 @@ def test_recovers_ground_truth_support(tiny_problem):
     w, _ = eng.run()
     stats = eng.prune_stats(w)
     assert stats["recall"] > 0.9          # active fibers retained
+
+
+def _tiny_ops():
+    """Small dense NNLS instance as matvec/rmatvec closures (module-level so
+    property tests don't depend on fixtures)."""
+    r = np.random.default_rng(7)
+    m = jnp.asarray(r.normal(size=(40, 24)), jnp.float32)
+    w_true = jnp.asarray(np.maximum(r.normal(size=24), 0), jnp.float32)
+    b = m @ w_true + 0.01 * jnp.asarray(r.normal(size=40), jnp.float32)
+    return (lambda w: m @ w), (lambda y: m.T @ y), b
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 30))
+def test_property_weights_nonneg_every_iteration(n_iters):
+    """NNLS invariant holds at *every* intermediate state, not just the
+    final one — checked by single-stepping through the stepped API."""
+    mv, rmv, b = _tiny_ops()
+    state = sbbnnls_init(jnp.ones((24,), jnp.float32))
+    for i in range(n_iters):
+        state, _ = sbbnnls_steps(mv, rmv, b, state, 1)
+        assert float(state.w.min()) >= 0.0, f"negative weight at iter {i}"
+        assert int(state.it) == i + 1
+
+
+def test_loss_nonincreasing_over_bb_windows():
+    """Barzilai-Borwein steps are not per-iteration monotone; the paper-level
+    guarantee is decrease over step *windows* (one odd/even BB pair per
+    window).  Windowed best-so-far loss must never increase."""
+    mv, rmv, b = _tiny_ops()
+    _, losses = sbbnnls_run(mv, rmv, b, jnp.ones((24,), jnp.float32), 40)
+    window = 2                             # one odd + one even BB step
+    mins = np.minimum.accumulate(np.asarray(losses))
+    per_window = mins[window - 1::window]
+    assert (np.diff(per_window) <= 1e-6 * np.abs(per_window[:-1])).all()
+    assert per_window[-1] < per_window[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_projected_gradient_idempotent(seed):
+    """Projection onto the active set is idempotent: projecting an already
+    projected gradient changes nothing (the frozen set is stable)."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(np.maximum(r.normal(size=64), 0), jnp.float32)
+    g = jnp.asarray(r.normal(size=64), jnp.float32)
+    once = projected_gradient(w, g)
+    twice = projected_gradient(w, once)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([1, 2, 3, 4, 6, 12]), st.integers(0, 1000))
+def test_property_stepped_composition_exact(k, seed):
+    """The stepped API composed k x (n/k) is *exactly* one n-iteration run:
+    the iteration counter rides in the state, so BB parity and every
+    intermediate value are identical (what makes serving-resume safe)."""
+    n = 12
+    mv, rmv, b = _tiny_ops()
+    r = np.random.default_rng(seed)
+    w0 = jnp.asarray(r.uniform(0.5, 1.5, 24), jnp.float32)
+
+    _, losses_once = sbbnnls_run(mv, rmv, b, w0, n)
+    state_once, _ = sbbnnls_run(mv, rmv, b, w0, n)
+
+    state = sbbnnls_init(w0)
+    chunks = []
+    for _ in range(n // k):
+        state, ls = sbbnnls_steps(mv, rmv, b, state, k)
+        chunks.append(np.asarray(ls))
+    np.testing.assert_array_equal(np.asarray(state.w),
+                                  np.asarray(state_once.w))
+    np.testing.assert_array_equal(np.concatenate(chunks),
+                                  np.asarray(losses_once))
+    assert int(state.it) == n
 
 
 @settings(max_examples=20, deadline=None)

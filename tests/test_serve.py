@@ -1,0 +1,235 @@
+"""Serving subsystem: bucketing, continuous batching, fairness, resume."""
+import numpy as np
+import pytest
+
+from repro.core.batched import BatchedLifeEngine
+from repro.core.life import LifeConfig, LifeEngine
+from repro.serve import BATCHABLE_FORMATS, LifeService, Scheduler, dataset_key
+from repro.serve.scheduler import Job
+
+
+def _cfg(**kw):
+    kw.setdefault("executor", "opt")
+    kw.setdefault("n_iters", 12)
+    kw.setdefault("plan_cache_dir", "")
+    return LifeConfig(**kw)
+
+
+# ----------------------------------------------------------------------------
+# scheduler semantics
+# ----------------------------------------------------------------------------
+
+def test_batched_bucket_matches_direct_engine(tiny_cohort):
+    """One bucket served in slices == one BatchedLifeEngine run, exactly."""
+    svc = LifeService(_cfg(), slice_iters=5)
+    ids = [svc.submit(p, n_iters=12, format="coo") for p in tiny_cohort]
+    results = svc.run()
+    W, _ = BatchedLifeEngine(tiny_cohort, _cfg()).run()
+    for i, jid in enumerate(ids):
+        w, losses = results[jid]
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(W[i]))
+        assert losses.shape == (12,)
+
+
+def test_sell_jobs_get_solo_buckets(tiny_problem):
+    """SELL operands don't stack under vmap — jobs run solo but still match
+    the LifeEngine result through the same stepped interface."""
+    svc = LifeService(_cfg(), slice_iters=5)
+    jid = svc.submit(tiny_problem, n_iters=12, format="sell")
+    w, losses = svc.run()[jid]
+    w_ref, l_ref = LifeEngine(tiny_problem,
+                              _cfg(format="sell", n_iters=12)).run()
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+    np.testing.assert_array_equal(losses, l_ref)
+
+
+def test_continuous_batching_admits_late_arrival(tiny_cohort):
+    """A job submitted mid-flight joins the bucket's next micro-batch, and
+    neither the in-flight jobs' trajectories nor the newcomer's differ from
+    their uninterrupted counterparts."""
+    svc = LifeService(_cfg(), slice_iters=4)
+    first = svc.submit(tiny_cohort[0], n_iters=12, format="coo")
+    svc.step()                                      # first runs 4 iters alone
+    late = svc.submit(tiny_cohort[1], n_iters=12, format="coo")
+    results = svc.run()
+    assert set(results) == {first, late}
+    for jid, prob in ((first, tiny_cohort[0]), (late, tiny_cohort[1])):
+        w_ref, l_ref = LifeEngine(prob, _cfg(n_iters=12)).run()
+        w, losses = results[jid]
+        np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(losses, l_ref, rtol=1e-3)
+
+
+def test_priority_orders_buckets(tiny_cohort):
+    """With everything else equal, the higher-priority tenant's bucket is
+    served first (they must land in different buckets to contend — different
+    formats here)."""
+    sched = Scheduler(_cfg(), slice_iters=100)      # one slice finishes a job
+    lo = Job(job_id="lo", problem=tiny_cohort[0], n_iters=8, priority=0,
+             format="coo")
+    hi = Job(job_id="hi", problem=tiny_cohort[1], n_iters=8, priority=5,
+             format="sell")
+    sched.submit(lo)
+    sched.submit(hi)
+    first = sched.tick()
+    assert [j.job_id for j in first] == ["hi"]
+
+
+def test_deadline_beats_priority(tiny_cohort):
+    """EDF is the primary key: a deadline-bearing job preempts a
+    higher-priority job with no deadline."""
+    sched = Scheduler(_cfg(), slice_iters=100)
+    sched.submit(Job(job_id="pri", problem=tiny_cohort[0], n_iters=8,
+                     priority=9, format="coo"))
+    sched.submit(Job(job_id="ddl", problem=tiny_cohort[1], n_iters=8,
+                     priority=0, deadline=1.0, format="sell"))
+    assert [j.job_id for j in sched.tick()] == ["ddl"]
+
+
+def test_fair_time_slicing(tiny_cohort):
+    """Two equal-priority buckets alternate slices (vtime fairness): neither
+    finishes a long solve before the other has been served."""
+    sched = Scheduler(_cfg(), slice_iters=4)
+    sched.submit(Job(job_id="a", problem=tiny_cohort[0], n_iters=8,
+                     format="coo"))
+    sched.submit(Job(job_id="b", problem=tiny_cohort[1], n_iters=8,
+                     format="sell"))
+    sched.tick()
+    a, b = sched.job("a"), sched.job("b")
+    served_first = {a.done, b.done}
+    assert served_first == {4, 0}
+    sched.tick()
+    assert (a.done, b.done) == (4, 4)               # the other bucket ran
+
+
+def test_rejects_unknown_format_and_duplicate_ids(tiny_problem):
+    sched = Scheduler(_cfg())
+    with pytest.raises(ValueError, match="format"):
+        sched.submit(Job(job_id="x", problem=tiny_problem, n_iters=4,
+                         format="csr"))
+    sched.submit(Job(job_id="x", problem=tiny_problem, n_iters=4,
+                     format="coo"))
+    with pytest.raises(ValueError, match="already"):
+        sched.submit(Job(job_id="x", problem=tiny_problem, n_iters=4,
+                         format="coo"))
+    with pytest.raises(ValueError, match="/"):
+        sched.submit(Job(job_id="a/b", problem=tiny_problem, n_iters=4,
+                         format="coo"))
+
+
+def test_batchable_formats_constant():
+    assert set(BATCHABLE_FORMATS) == {"auto", "coo", "alto"}
+
+
+def test_rejects_compaction_config():
+    """Serving drives engines through the stepped API and would silently
+    skip LifeEngine.run()'s compaction loop — refuse instead."""
+    with pytest.raises(ValueError, match="compact"):
+        Scheduler(_cfg(compact_every=10))
+
+
+# ----------------------------------------------------------------------------
+# resume-after-kill (the acceptance criterion: identical weights, coo + sell)
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["coo", "sell"])
+def test_interrupted_then_resumed_matches_uninterrupted(fmt, tiny_problem,
+                                                        tmp_path):
+    cfg = _cfg(n_iters=24)
+    ref = LifeService(cfg, slice_iters=5)
+    jid = ref.submit(tiny_problem, job_id="tenant", n_iters=24, format=fmt)
+    w_ref, l_ref = ref.run()[jid]
+
+    ck = str(tmp_path / "svc")
+    svc = LifeService(cfg, ckpt_dir=ck, checkpoint_every=1, slice_iters=5)
+    svc.submit(tiny_problem, job_id="tenant", n_iters=24, format=fmt)
+    svc.step()
+    svc.step()                                      # 10 of 24 iters, then die
+    assert svc.scheduler.job("tenant").done == 10
+    del svc                                         # the "kill"
+
+    svc2 = LifeService(cfg, ckpt_dir=ck, checkpoint_every=1, slice_iters=5)
+    assert svc2.resumable_jobs == ("tenant",)
+    svc2.submit(tiny_problem, job_id="tenant", format=fmt)
+    assert svc2.scheduler.job("tenant").done == 10  # adopted mid-flight
+    w_res, l_res = svc2.run()["tenant"]
+
+    np.testing.assert_allclose(np.asarray(w_res), np.asarray(w_ref),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(l_res, l_ref)     # bit-compatible in fact
+    assert l_res.shape == (24,)
+
+
+def test_resume_rejects_different_data(tiny_problem, tiny_cohort, tmp_path):
+    """A checkpointed job id can only re-attach to byte-identical data."""
+    ck = str(tmp_path / "svc")
+    svc = LifeService(_cfg(), ckpt_dir=ck, checkpoint_every=1, slice_iters=4)
+    svc.submit(tiny_problem, job_id="t", n_iters=12, format="coo")
+    svc.step()
+    del svc
+    svc2 = LifeService(_cfg(), ckpt_dir=ck)
+    with pytest.raises(ValueError, match="digest"):
+        svc2.submit(tiny_cohort[0], job_id="t", format="coo")
+
+
+def test_completed_job_reserves_instantly_after_restart(tiny_problem,
+                                                        tmp_path):
+    """A kill between a job finishing and the client reading the result
+    loses nothing: the final state is in the snapshot, and resubmission
+    re-serves it without re-running the solve."""
+    ck = str(tmp_path / "svc")
+    svc = LifeService(_cfg(), ckpt_dir=ck, checkpoint_every=1, slice_iters=4)
+    svc.submit(tiny_problem, job_id="t", n_iters=12, format="coo")
+    w_ref, l_ref = svc.run()["t"]
+    del svc
+    svc2 = LifeService(_cfg(), ckpt_dir=ck)
+    assert svc2.resumable_jobs == ("t",)
+    svc2.submit(tiny_problem, job_id="t", format="coo")
+    assert svc2.scheduler.job("t").remaining == 0   # nothing left to run
+    w, losses = svc2.run()["t"]
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+    np.testing.assert_array_equal(losses, l_ref)
+
+
+def test_resume_honors_explicit_overrides(tiny_problem, tmp_path):
+    """Explicitly passed n_iters/priority win over checkpointed values
+    (extend a solve on resume); a conflicting explicit format is an error,
+    and an omitted format restores the checkpointed one."""
+    ck = str(tmp_path / "svc")
+    svc = LifeService(_cfg(), ckpt_dir=ck, checkpoint_every=1, slice_iters=4)
+    svc.submit(tiny_problem, job_id="t", n_iters=12, priority=3,
+               format="coo")
+    svc.step()
+    del svc
+    svc2 = LifeService(_cfg(), ckpt_dir=ck, checkpoint_every=1,
+                       slice_iters=4)
+    with pytest.raises(ValueError, match="format"):
+        svc2.submit(tiny_problem, job_id="t", format="sell")
+    svc2.submit(tiny_problem, job_id="t", n_iters=20)   # extend 12 -> 20
+    job = svc2.scheduler.job("t")
+    assert (job.n_iters, job.done) == (20, 4)
+    assert job.priority == 3                            # restored
+    assert job.format == "coo"                          # restored
+    _, losses = svc2.run()["t"]
+    assert losses.shape == (20,)
+
+
+def test_dataset_key_is_content_addressed(tiny_problem, tiny_cohort):
+    assert dataset_key(tiny_problem) == dataset_key(tiny_problem)
+    assert dataset_key(tiny_problem) != dataset_key(tiny_cohort[0])
+
+
+def test_checkpoint_roundtrip_includes_loss_history(tiny_problem, tmp_path):
+    """The restored job's loss trace is the full history, not just the
+    post-resume tail."""
+    ck = str(tmp_path / "svc")
+    svc = LifeService(_cfg(), ckpt_dir=ck, checkpoint_every=1, slice_iters=6)
+    svc.submit(tiny_problem, job_id="t", n_iters=18, format="coo")
+    svc.step()
+    del svc
+    svc2 = LifeService(_cfg(), ckpt_dir=ck, checkpoint_every=1,
+                       slice_iters=6)
+    svc2.submit(tiny_problem, job_id="t", format="coo")
+    _, losses = svc2.run()["t"]
+    assert losses.shape == (18,)
