@@ -10,7 +10,7 @@ from benchmarks import (table2_restructuring, table3_partitioning,
                         table4_opt_combos, table5_scaling,
                         table8_kernel_ladder, table9_param_sweep,
                         table10_end2end, table11_batched, table12_formats,
-                        table13_service)
+                        table13_service, table14_shard_scaling)
 
 TABLES = {
     "table2": table2_restructuring,
@@ -23,6 +23,7 @@ TABLES = {
     "table11": table11_batched,       # beyond-paper: multi-subject batching
     "table12": table12_formats,       # beyond-paper: Phi format comparison
     "table13": table13_service,       # beyond-paper: serving under open-loop load
+    "table14": table14_shard_scaling, # beyond-paper: sharded subjects/sec scaling
 }
 
 

@@ -24,6 +24,15 @@ sort choice cohort-wide.  Executors whose operands are per-subject static
 shapes (``kernel`` tile plans, ``shard`` mesh layouts) are rejected —
 :class:`~repro.core.registry.Executor.vmappable` records which factories
 admit stacking.  See DESIGN.md §6.2.
+
+Mesh placement (DESIGN.md §9): with ``shard_rows * shard_cols > 1`` the
+stacked cohort is laid out over the same (``data``, ``model``) mesh the
+sharded executors use — *subjects* shard over the batch (``data``) axis and
+the stacked Phi coefficient slots over ``model`` — by ``device_put``-ing
+the operands under NamedShardings and letting GSPMD partition the vmapped
+solve.  An axis whose size does not divide its mesh axis stays replicated
+(jax requires even chunks for explicit placement); results are unchanged
+either way, only the partitioning differs.
 """
 from __future__ import annotations
 
@@ -120,7 +129,37 @@ class BatchedLifeEngine:
         self.dictionary = p0.dictionary
         self.n_subjects = len(self.problems)
         self.inspector_seconds = 0.0
+        self.mesh = self._make_mesh()
         self._build()
+
+    def _make_mesh(self):
+        """(data, model) mesh when the config asks for a multi-cell layout."""
+        R = getattr(self.config, "shard_rows", 1)
+        C = getattr(self.config, "shard_cols", 1)
+        if R * C <= 1:
+            return None
+        if R * C > len(jax.devices()):
+            raise ValueError(
+                f"batched mesh needs {R * C} devices, "
+                f"have {len(jax.devices())}")
+        from repro import compat
+        return compat.make_mesh((R, C), ("data", "model"))
+
+    def _place_on_mesh(self) -> None:
+        """Subjects over the batch (`data`) axis, Phi slots over `model`.
+
+        Axes that don't divide their mesh axis stay replicated (jax needs
+        even chunks for device_put); GSPMD keeps results identical."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        subj = ("data" if self.n_subjects % self.mesh.shape["data"] == 0
+                else None)
+        slot = ("model" if self.nc_padded % self.mesh.shape["model"] == 0
+                else None)
+        phi_sh = NamedSharding(self.mesh, P(subj, slot))
+        b_sh = NamedSharding(self.mesh, P(subj, None, None))
+        self.phi_dsc = jax.device_put(self.phi_dsc, phi_sh)
+        self.phi_wc = jax.device_put(self.phi_wc, phi_sh)
+        self.b = jax.device_put(self.b, b_sh)
 
     # -- inspector ----------------------------------------------------------
     def _resolve_recipe(self):
@@ -133,9 +172,11 @@ class BatchedLifeEngine:
             # picks between them on the first subject (FormatPlan-cached),
             # and an explicit format="sell" is rejected by resolve_format.
             from repro.formats import select as fsel
+            # mesh_aware=False: shard_rows/cols are placement-only here
+            # (device_put of the stacked operands), so alto stays eligible
             self.format_plan = fsel.resolve_format(
                 self.problems[0].phi, self.problems[0], self.config,
-                self.cache, allowed=("coo", "alto"))
+                self.cache, allowed=("coo", "alto"), mesh_aware=False)
             if self.format_plan.format == "alto":
                 self._alto_order = True
                 return None, None, spmv.dsc_naive, spmv.wc_naive
@@ -176,6 +217,8 @@ class BatchedLifeEngine:
         self.phi_wc = _stack_phis(
             [prep(phi, wc_dim, self._wc_fn) for phi in phis])
         self.b = jnp.stack([p.b for p in self.problems])
+        if self.mesh is not None:
+            self._place_on_mesh()
         self._runner = jax.jit(self._make_runner(),
                                static_argnames=("n_iters",))
         self.inspector_seconds += time.perf_counter() - t0

@@ -173,6 +173,34 @@ def phi_stats(phi, *, row_tile: int = 8, slot_tile: int = 32) -> dict:
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """2-D mesh partition plan: equal-nnz (voxel-range x fiber-range) cells.
+
+    ``voxel_cuts``/``fiber_cuts`` are *id-space* boundaries (int64[R+1] /
+    int64[C+1]): mesh row ``r`` owns voxels ``[voxel_cuts[r], voxel_cuts[r+1])``
+    and mesh column ``c`` owns fibers ``[fiber_cuts[c], fiber_cuts[c+1])``.
+    Produced by :func:`repro.formats.shard.partition_cuts` from
+    :func:`shard_boundaries` per dimension, and serialized through the
+    persistent plan cache under a key that includes the mesh shape and the
+    device count (a plan built for one topology must miss on another).
+    """
+
+    R: int
+    C: int
+    voxel_cuts: np.ndarray        # int64 (R+1,)
+    fiber_cuts: np.ndarray        # int64 (C+1,)
+
+    @property
+    def nv_local(self) -> int:
+        """Common per-row voxel count (max range length; rows pad up to it)."""
+        return int(np.max(np.diff(self.voxel_cuts)))
+
+    @property
+    def nf_local(self) -> int:
+        return int(np.max(np.diff(self.fiber_cuts)))
+
+
 def shard_boundaries(sorted_ids: np.ndarray, n_shards: int) -> np.ndarray:
     """Equal-nnz shard cuts snapped to sub-vector boundaries.
 

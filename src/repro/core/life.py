@@ -12,7 +12,10 @@ ladder (paper §6.3.1/§6.4.1), selectable via ``executor=``:
                                   (interpret=True off-TPU)
   auto         runtime autotune : measured selection (paper's hybrid/runtime
                                   choice, §4.1.2)
-  shard        mesh partition   : 2-D shard_map SpMVs (distributed/life_shard)
+  shard        mesh partition   : 2-D shard_map SpMVs over inner sorted-COO
+                                  cells (distributed/life_shard, DESIGN.md §9)
+  shard-sell   mesh + SELL      : per-cell SELL tiles feeding the Pallas SELL
+                                  kernels under shard_map
 
 Inspector products (tile plans, autotune choices) are memoized through the
 persistent :class:`~repro.core.plan_cache.PlanCache`, so a second engine
@@ -54,7 +57,10 @@ class LifeConfig:
     c_tile: int = 256               # kernel coefficient-tile size
     row_tile: int = 8               # kernel output row-block size
     kernel_interpret: bool = True   # CPU container: validate via interpret
-    shard_rows: int = 1             # `shard` executor mesh geometry (R, C)
+    # mesh geometry (R, C) for the sharded executors; with R*C > 1 the
+    # format="auto" candidate set and executor mapping become mesh-aware
+    # (formats/select.py picks among formats with a registered mesh executor)
+    shard_rows: int = 1
     shard_cols: int = 1
     # Phi layout: "coo" (canonical; executor= picks the code version),
     # "sell" / "alto" (force that format's executor), or "auto" (pick per
@@ -92,9 +98,15 @@ class LifeEngine:
         t0 = time.perf_counter()
         self.phi = phi
         if self.config.format == "coo":
+            name = self.config.executor
+            if self.config.shard_rows * self.config.shard_cols > 1:
+                # a multi-cell mesh request is the strongest signal: route
+                # through the mesh-aware mapping (-> "shard") instead of
+                # silently running the configured executor on one device
+                from repro.formats import select as fsel
+                name = fsel.executor_for("coo", self.config)
             self.executor: Executor = REGISTRY.create(
-                self.config.executor, phi, self.problem, self.config,
-                self.cache)
+                name, phi, self.problem, self.config, self.cache)
         else:
             # format-parameterized path: "sell"/"alto" force that layout's
             # executor; "auto" selects per dataset (FormatPlan-cached)

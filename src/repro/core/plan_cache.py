@@ -32,7 +32,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.inspector import TilePlan
+from repro.core.inspector import ShardPlan, TilePlan
 from repro.core.restructure import SpmvPlan
 from repro.formats.base import FORMAT_VERSION as _PHI_FORMAT_VERSION
 from repro.formats.base import FormatPlan
@@ -98,6 +98,24 @@ def format_plan_key(atoms: np.ndarray, voxels: np.ndarray, fibers: np.ndarray,
     h.update(",".join(sorted(allowed)).encode())
     h.update(np.float64([sell_accept, sell_reject]).tobytes())
     h.update(np.int64(list(sizes) + [row_tile, slot_tile]).tobytes())
+    for arr in (atoms, voxels, fibers):
+        h.update(np.ascontiguousarray(arr, np.int64).tobytes())
+    return h.hexdigest()
+
+
+def shard_plan_key(atoms: np.ndarray, voxels: np.ndarray, fibers: np.ndarray,
+                   *, sizes, R: int, C: int, cell_format: str,
+                   n_devices: int) -> str:
+    """Digest for a ShardPlan: full index content + mode sizes + the mesh
+    geometry (R x C), the per-cell layout the partition will be materialized
+    in, and the device count the mesh is built over.  Including the topology
+    is the point: a plan written on 8 virtual devices must miss cleanly when
+    the same dataset is opened on 1 (or on a different R x C), instead of
+    silently rebuilding a layout the mesh cannot place."""
+    h = hashlib.sha256()
+    h.update(b"shard-plan-v%d.%d:" % (_FORMAT_VERSION, _PHI_FORMAT_VERSION))
+    h.update(cell_format.encode())
+    h.update(np.int64(list(sizes) + [R, C, n_devices]).tobytes())
     for arr in (atoms, voxels, fibers):
         h.update(np.ascontiguousarray(arr, np.int64).tobytes())
     return h.hexdigest()
@@ -245,6 +263,26 @@ class PlanCache:
         if plan.order is not None:
             payload["order"] = np.asarray(plan.order, np.int64)
         self._write(key, payload)
+
+    # -- ShardPlan ------------------------------------------------------------
+    def get_shard_plan(self, key: str) -> Optional[ShardPlan]:
+        raw = self._read(key)
+        self.stats.record(raw is not None)
+        if raw is None:
+            return None
+        try:
+            geom = raw["geometry"]
+            return ShardPlan(R=int(geom[0]), C=int(geom[1]),
+                             voxel_cuts=raw["voxel_cuts"].astype(np.int64),
+                             fiber_cuts=raw["fiber_cuts"].astype(np.int64))
+        except (KeyError, IndexError, ValueError):
+            return None
+
+    def put_shard_plan(self, key: str, plan: ShardPlan) -> None:
+        self._write(key, dict(
+            geometry=np.int64([plan.R, plan.C]),
+            voxel_cuts=np.asarray(plan.voxel_cuts, np.int64),
+            fiber_cuts=np.asarray(plan.fiber_cuts, np.int64)))
 
     # -- FormatPlan -----------------------------------------------------------
     def get_format_plan(self, key: str) -> Optional[FormatPlan]:

@@ -26,7 +26,10 @@ The ladder (paper §6.3.1/§6.4.1):
   alto         linearized COO   : ALTO single-index sort order, one Phi copy
                                   serves both ops
   auto         runtime autotune : measured selection (paper §4.1.2)
-  shard        mesh partition   : 2-D shard_map SpMVs behind the same protocol
+  shard        mesh partition   : 2-D shard_map SpMVs over inner sorted-COO
+                                  cells behind the same protocol
+  shard-sell   mesh + SELL      : per-cell SELL tiles feeding the Pallas
+                                  SELL kernels under shard_map (DESIGN.md §9)
 
 Format-parameterized construction: ``create_for_format`` resolves a
 ``LifeConfig.format`` choice ("coo"/"sell"/"alto"/"auto", the latter via
@@ -85,14 +88,17 @@ class ExecutorRegistry:
     def __init__(self):
         self._factories: Dict[str, ExecutorFactory] = {}
         self._consumes: Dict[str, str] = {}
+        self._mesh: Dict[str, bool] = {}
 
-    def register(self, name: str, *, consumes: str = "coo"
+    def register(self, name: str, *, consumes: str = "coo",
+                 mesh: bool = False
                  ) -> Callable[[ExecutorFactory], ExecutorFactory]:
         def deco(factory: ExecutorFactory) -> ExecutorFactory:
             if name in self._factories:
                 raise ValueError(f"executor {name!r} already registered")
             self._factories[name] = factory
             self._consumes[name] = consumes
+            self._mesh[name] = mesh
             return factory
         return deco
 
@@ -110,6 +116,16 @@ class ExecutorRegistry:
         """All registered executors that run over ``format_name``."""
         return tuple(sorted(n for n, f in self._consumes.items()
                             if f == format_name))
+
+    def mesh_executor_for(self, format_name: str) -> Optional[str]:
+        """The mesh-partitioned executor consuming ``format_name`` (the
+        factory registered with ``mesh=True``), or None when the format has
+        no sharded path (e.g. alto).  Drives the selector's mesh-aware
+        candidate set and the serving scheduler's mesh-slice buckets."""
+        for n in self.executors_for_format(format_name):
+            if self._mesh.get(n):
+                return n
+        return None
 
     def __contains__(self, name: str) -> bool:
         return name in self._factories
@@ -262,8 +278,20 @@ def create_for_format(phi, problem, config,
     if cache is None:
         cache = PlanCache("")
     plan = fsel.resolve_format(phi, problem, config, cache, allowed=allowed)
-    executor = REGISTRY.create(fsel.executor_for(plan.format, config),
-                               phi, problem, config, cache)
+    name = fsel.executor_for(plan.format, config)
+    cells = (getattr(config, "shard_rows", 1)
+             * getattr(config, "shard_cols", 1))
+    if cells > 1 and name != REGISTRY.mesh_executor_for(plan.format):
+        # never silently drop a requested partition: a format with no
+        # sharded path (alto) cannot honor shard_rows x shard_cols > 1
+        from repro.formats import format_names
+        meshable = [f for f in format_names()
+                    if REGISTRY.mesh_executor_for(f)]
+        raise ValueError(
+            f"format {plan.format!r} has no mesh executor; cannot honor "
+            f"shard_rows x shard_cols = {cells} "
+            f"(mesh-capable formats: {meshable})")
+    executor = REGISTRY.create(name, phi, problem, config, cache)
     executor.plans["format"] = plan
     return executor
 
@@ -310,62 +338,119 @@ def _make_auto(phi, problem, config, cache) -> Executor:
         vmappable=True)
 
 
-@REGISTRY.register("shard")
-def _make_shard(phi, problem, config, cache) -> Executor:
-    """2-D mesh-partitioned SpMVs behind the single-process protocol.
+def _layout_positions(plan, n_voxels: int, n_fibers: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """global id -> padded (range-stacked) position maps, host-computed once."""
+    w_pos = np.zeros(n_fibers, np.int64)
+    for c in range(plan.C):
+        lo, hi = plan.fiber_cuts[c], plan.fiber_cuts[c + 1]
+        w_pos[lo:hi] = c * plan.nf_local + np.arange(hi - lo)
+    y_pos = np.zeros(n_voxels, np.int64)
+    for r in range(plan.R):
+        lo, hi = plan.voxel_cuts[r], plan.voxel_cuts[r + 1]
+        y_pos[lo:hi] = r * plan.nv_local + np.arange(hi - lo)
+    return w_pos, y_pos
+
+
+def _make_shard_executor(phi, problem, config, cache,
+                         cell_format: str) -> Executor:
+    """Shared factory for the mesh executors (`shard` / `shard-sell`).
 
     Builds an (R, C) = (shard_rows, shard_cols) mesh over the available
-    devices, lays out the coefficients per distributed/life_shard.py, and
-    wraps the shard_map'd per-op functions with the global<->padded layout
-    maps so callers see plain (Nf,) -> (Nv, Ntheta) closures.
+    devices, materializes each (voxel-range x fiber-range) cell through the
+    PhiFormat protocol (``formats/shard.py:ShardPhi`` composing the inner
+    ``cell_format``), and wraps the shard_map'd per-op functions with the
+    global<->padded layout maps so callers see plain (Nf,) -> (Nv, Ntheta)
+    closures.  The partition plan is persistent-cache-backed under a key
+    that includes the mesh shape, the inner format, and the device count.
     """
     from repro import compat
     from repro.distributed import life_shard as LS
+    from repro.formats.shard import encode_pair, partition_cuts
 
     R = getattr(config, "shard_rows", 1)
     C = getattr(config, "shard_cols", 1)
+    name = "shard" if cell_format == "coo" else "shard-sell"
     if R * C > len(jax.devices()):
         raise ValueError(
-            f"shard executor needs {R * C} devices, have {len(jax.devices())}")
+            f"{name} executor needs {R * C} devices, "
+            f"have {len(jax.devices())}")
     mesh = compat.make_mesh((R, C), ("data", "model"))
-    n_theta = problem.dictionary.shape[1]
-    shards = LS.build_life_shards(phi, n_theta, R=R, C=C)
-    dsc_sm, wc_sm = LS.make_sharded_ops(
-        mesh, dict(nv_local=shards.nv_local, nf_local=shards.nf_local,
-                   n_theta=n_theta))
+    d = problem.dictionary
+    n_theta = d.shape[1]
+    plan = partition_cuts(phi, R, C, cell_format=cell_format, cache=cache)
+    row_tile = getattr(config, "row_tile", 8)
+    slot_tile = getattr(config, "slot_tile", 32)
+    sp_dsc, sp_wc = encode_pair(phi, cell_format=cell_format, plan=plan,
+                                row_tile=row_tile, slot_tile=slot_tile)
+    meta = dict(nv_local=plan.nv_local, nf_local=plan.nf_local,
+                n_theta=n_theta)
 
-    # global <-> padded layout index maps (host-computed once)
-    w_pos = np.zeros(phi.n_fibers, np.int64)
-    for c in range(C):
-        lo, hi = shards.fiber_cuts[c], shards.fiber_cuts[c + 1]
-        w_pos[lo:hi] = c * shards.nf_local + np.arange(hi - lo)
-    y_pos = np.zeros(phi.n_voxels, np.int64)
-    for r in range(R):
-        lo, hi = shards.voxel_cuts[r], shards.voxel_cuts[r + 1]
-        y_pos[lo:hi] = r * shards.nv_local + np.arange(hi - lo)
+    w_pos, y_pos = _layout_positions(plan, phi.n_voxels, phi.n_fibers)
     w_pos_j = jnp.asarray(w_pos)
     y_pos_j = jnp.asarray(y_pos)
+    nf_pad = C * plan.nf_local
+    nv_pad = R * plan.nv_local
 
-    d = problem.dictionary
-    cell = (jnp.asarray(shards.dsc_atoms), jnp.asarray(shards.dsc_voxels_local),
-            jnp.asarray(shards.dsc_fibers_local), jnp.asarray(shards.dsc_values))
-    wcell = (jnp.asarray(shards.wc_atoms), jnp.asarray(shards.wc_voxels_local),
-             jnp.asarray(shards.wc_fibers_local), jnp.asarray(shards.wc_values))
-    nf_pad = C * shards.nf_local
+    if cell_format == "coo":
+        dsc_sm, wc_sm = LS.make_sharded_ops(mesh, meta)
+        cell = tuple(jnp.asarray(sp_dsc.arrays[k])
+                     for k in ("atoms", "voxels", "fibers", "values"))
+        wcell = tuple(jnp.asarray(sp_wc.arrays[k])
+                      for k in ("atoms", "voxels", "fibers", "values"))
+        d_op = d
+
+        def run_dsc(w_padded):
+            return dsc_sm(*cell, d_op, w_padded)
+
+        def run_wc(y_padded):
+            return wc_sm(*wcell, d_op, y_padded)
+    else:
+        from repro.kernels.ops import pad_lanes
+        dsc_sm, wc_sm = LS.make_sharded_sell_ops(
+            mesh, meta, row_tile=row_tile, slot_tile=slot_tile,
+            interpret=getattr(config, "kernel_interpret", True))
+        cell = (jnp.asarray(sp_dsc.arrays["atoms"]),
+                jnp.asarray(sp_dsc.arrays["others"]),
+                jnp.asarray(sp_dsc.arrays["values"]))
+        wcell = (jnp.asarray(sp_wc.arrays["atoms"]),
+                 jnp.asarray(sp_wc.arrays["others"]),
+                 jnp.asarray(sp_wc.arrays["values"]))
+        d_op = pad_lanes(d)
+
+        def run_dsc(w_padded):
+            return dsc_sm(*cell, d_op, w_padded)[:, :n_theta]
+
+        def run_wc(y_padded):
+            return wc_sm(*wcell, d_op, pad_lanes(y_padded))
 
     @jax.jit
     def matvec(w: Array) -> Array:
         w_padded = jnp.zeros((nf_pad,), w.dtype).at[w_pos_j].set(w)
-        y_padded = dsc_sm(*cell, d, w_padded)
+        y_padded = run_dsc(w_padded)
         return jnp.take(y_padded, y_pos_j, axis=0)
 
     @jax.jit
     def rmatvec(y: Array) -> Array:
-        nv_pad = R * shards.nv_local
         y_padded = jnp.zeros((nv_pad, y.shape[1]), y.dtype
                              ).at[y_pos_j].set(y)
-        w_padded = wc_sm(*wcell, d, y_padded)
+        w_padded = run_wc(y_padded)
         return jnp.take(w_padded, w_pos_j)
 
-    return Executor(name="shard", matvec=matvec, rmatvec=rmatvec,
-                    plans=dict(mesh=mesh, shards=shards))
+    return Executor(name=name, matvec=matvec, rmatvec=rmatvec,
+                    plans=dict(mesh=mesh, partition=plan,
+                               shard_dsc=sp_dsc, shard_wc=sp_wc))
+
+
+@REGISTRY.register("shard", mesh=True)
+def _make_shard(phi, problem, config, cache) -> Executor:
+    """2-D mesh-partitioned SpMVs over inner sorted-COO cells."""
+    return _make_shard_executor(phi, problem, config, cache, "coo")
+
+
+@REGISTRY.register("shard-sell", consumes="sell", mesh=True)
+def _make_shard_sell(phi, problem, config, cache) -> Executor:
+    """2-D mesh-partitioned SpMVs over per-cell SELL tiles: each device's
+    (voxel-range x fiber-range) cell is a blocked-ELL slot array feeding the
+    Pallas SELL kernels under shard_map (DESIGN.md §9)."""
+    return _make_shard_executor(phi, problem, config, cache, "sell")

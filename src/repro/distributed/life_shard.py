@@ -14,14 +14,19 @@ device mesh (its MPI-LiFE comparison point, §7.1.3, rebuilt jax-native):
     sharded on (w-like: `model`; y-like: rows).
 
 Boundaries are equal-nnz and snapped to sub-vector boundaries
-(inspector.shard_boundaries) — the synchronization-free mapping of §4.2.1.2
-at mesh granularity; padding coefficients carry value 0 and are inert through
-both ops and the solver.
+(inspector.shard_boundaries via formats/shard.py:partition_cuts) — the
+synchronization-free mapping of §4.2.1.2 at mesh granularity; padding
+coefficients carry value 0 and are inert through both ops and the solver.
+
+Cell materialization goes through the PhiFormat subsystem (DESIGN.md §9):
+:func:`build_life_shards` and the registry's ``shard``/``shard-sell``
+executors encode each (voxel-range x fiber-range) cell with
+``formats/shard.py:ShardPhi`` — inner sorted-COO cells for the segment-sum
+path here, inner SELL tiles for :func:`make_sharded_sell_ops`.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -30,7 +35,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.inspector import shard_boundaries
 from repro.core.sbbnnls import projected_gradient
 from repro.core.std import PhiTensor
 from repro.data.dmri import LifeProblem
@@ -59,63 +63,28 @@ class LifeShards:
     fiber_cuts: np.ndarray      # (C+1,)
 
 
-def build_life_shards(phi: PhiTensor, n_theta: int, R: int, C: int
-                      ) -> LifeShards:
-    atoms = np.asarray(phi.atoms)
-    voxels = np.asarray(phi.voxels)
-    fibers = np.asarray(phi.fibers)
-    values = np.asarray(phi.values)
+def build_life_shards(phi: PhiTensor, n_theta: int, R: int, C: int,
+                      cache=None) -> LifeShards:
+    """Materialize the 2-D partition through the format subsystem.
 
-    # equal-nnz voxel/fiber range boundaries (snap via sorted projections)
-    v_sorted = np.sort(voxels)
-    f_sorted = np.sort(fibers)
-    v_cuts_idx = shard_boundaries(v_sorted, R)
-    f_cuts_idx = shard_boundaries(f_sorted, C)
-    voxel_cuts = np.asarray(
-        [0] + [int(v_sorted[min(i, len(v_sorted) - 1)]) if 0 < i < len(v_sorted)
-               else phi.n_voxels for i in v_cuts_idx[1:]], np.int64)
-    fiber_cuts = np.asarray(
-        [0] + [int(f_sorted[min(i, len(f_sorted) - 1)]) if 0 < i < len(f_sorted)
-               else phi.n_fibers for i in f_cuts_idx[1:]], np.int64)
-    voxel_cuts[-1] = phi.n_voxels
-    fiber_cuts[-1] = phi.n_fibers
+    Both per-op layouts (voxel-sorted for DSC, fiber-sorted for WC) are
+    :class:`~repro.formats.shard.ShardPhi` encodes over inner COO cells —
+    the partition boundaries come from one shared
+    :func:`~repro.formats.shard.partition_cuts` plan (persistent-cache-backed
+    when ``cache`` is given), so this function is now a thin adapter from
+    the PhiFormat world to the historical LifeShards operand names.
+    """
+    from repro.formats.shard import encode_pair, partition_cuts
 
-    nv_local = int(np.max(np.diff(voxel_cuts))) if R else phi.n_voxels
-    nf_local = int(np.max(np.diff(fiber_cuts))) if C else phi.n_fibers
-
-    row_of = np.searchsorted(voxel_cuts, voxels, side="right") - 1
-    col_of = np.searchsorted(fiber_cuts, fibers, side="right") - 1
-
-    cells: Dict[Tuple[int, int], np.ndarray] = {}
-    nnz_max = 1
-    for r in range(R):
-        for c in range(C):
-            idx = np.nonzero((row_of == r) & (col_of == c))[0]
-            cells[(r, c)] = idx
-            nnz_max = max(nnz_max, idx.size)
-
-    def stack(order_key: str) -> Tuple[np.ndarray, ...]:
-        A = np.zeros((R, C, nnz_max), np.int32)
-        V = np.zeros((R, C, nnz_max), np.int32)
-        F = np.zeros((R, C, nnz_max), np.int32)
-        W = np.zeros((R, C, nnz_max), np.float32)
-        for (r, c), idx in cells.items():
-            key = voxels[idx] if order_key == "voxel" else fibers[idx]
-            o = idx[np.argsort(key, kind="stable")]
-            n = o.size
-            A[r, c, :n] = atoms[o]
-            V[r, c, :n] = voxels[o] - voxel_cuts[r]
-            F[r, c, :n] = fibers[o] - fiber_cuts[c]
-            W[r, c, :n] = values[o]
-        return A, V, F, W
-
-    da, dv, df, dw = stack("voxel")
-    wa, wv, wf, ww = stack("fiber")
+    plan = partition_cuts(phi, R, C, cell_format="coo", cache=cache)
+    dsc, wc = encode_pair(phi, cell_format="coo", plan=plan)
     return LifeShards(
-        dsc_atoms=da, dsc_voxels_local=dv, dsc_fibers_local=df, dsc_values=dw,
-        wc_atoms=wa, wc_voxels_local=wv, wc_fibers_local=wf, wc_values=ww,
-        nv_local=nv_local, nf_local=nf_local, n_theta=n_theta, R=R, C=C,
-        voxel_cuts=voxel_cuts, fiber_cuts=fiber_cuts)
+        dsc_atoms=dsc.arrays["atoms"], dsc_voxels_local=dsc.arrays["voxels"],
+        dsc_fibers_local=dsc.arrays["fibers"], dsc_values=dsc.arrays["values"],
+        wc_atoms=wc.arrays["atoms"], wc_voxels_local=wc.arrays["voxels"],
+        wc_fibers_local=wc.arrays["fibers"], wc_values=wc.arrays["values"],
+        nv_local=plan.nv_local, nf_local=plan.nf_local, n_theta=n_theta,
+        R=R, C=C, voxel_cuts=plan.voxel_cuts, fiber_cuts=plan.fiber_cuts)
 
 
 def shard_b(shards: LifeShards, b: np.ndarray) -> np.ndarray:
@@ -269,6 +238,64 @@ def make_sharded_ops(mesh: Mesh, shards_meta: Dict[str, int]):
     wc_fn = compat.shard_map(
         wc_op, mesh=mesh,
         in_specs=(cell, cell, cell, cell, P(None, None), P(rows, None)),
+        out_specs=P("model"))
+    return dsc_fn, wc_fn
+
+
+def make_sharded_sell_ops(mesh: Mesh, shards_meta: Dict[str, int], *,
+                          row_tile: int, slot_tile: int,
+                          interpret: bool = True):
+    """shard_map'd SpMVs over per-cell SELL tiles (the `shard-sell` path).
+
+    Same mesh layout and collectives as :func:`make_sharded_ops`, but each
+    device's cell is a blocked-ELL slot array feeding the existing Pallas
+    SELL kernels (``kernels/dsc.py:dsc_sell_pallas`` /
+    ``kernels/wc.py:wc_sell_pallas``) instead of a sorted-COO segment sum —
+    the DESIGN.md §7 fast path lifted to mesh granularity (§9).
+
+    Inputs (global layouts; ``T_p`` = lane-padded Ntheta):
+      cell slot arrays: (R, C, rows_padded, width) sharded (rows, model, ., .)
+      d_padded:         (Na, T_p) replicated
+      w:                (C*nf_local,) sharded (model,)     [dsc]
+      y_padded:         (R*nv_local, T_p) sharded (rows,)  [wc]
+    Returns (dsc_fn, wc_fn):
+      dsc_fn(atoms, fibers, values, d_padded, w)  -> (R*nv_local, T_p)
+      wc_fn(atoms, voxels, values, d_padded, y)   -> (C*nf_local,)
+    """
+    from repro.kernels import dsc as dsc_kernel
+    from repro.kernels import wc as wc_kernel
+
+    rows = _row_axes(mesh)
+    nv_l = shards_meta["nv_local"]
+    nf_l = shards_meta["nf_local"]
+    cell = P(rows, "model", None, None)
+    sq = lambda x: x.reshape(x.shape[-2], x.shape[-1])
+
+    def dsc_op(a, f, vals, d, w_loc):
+        a, f, vals = map(sq, (a, f, vals))
+        scaled = jnp.take(w_loc.reshape(-1), f) * vals   # padding slots stay 0
+        y = dsc_kernel.dsc_sell_pallas(
+            a, scaled, d, row_tile=row_tile, slot_tile=slot_tile,
+            interpret=interpret)
+        return jax.lax.psum(y[:nv_l], "model")
+
+    def wc_op(a, v, vals, d, y_loc):
+        a, v, vals = map(sq, (a, v, vals))
+        y2 = y_loc.reshape(y_loc.shape[-2], y_loc.shape[-1])
+        # pre-gather of local Y rows; padding slots gather row 0, value 0
+        yg = jnp.take(y2, v, axis=0)
+        w = wc_kernel.wc_sell_pallas(
+            a, yg, vals, d, row_tile=row_tile, slot_tile=slot_tile,
+            interpret=interpret)
+        return jax.lax.psum(w.reshape(-1)[:nf_l], rows)
+
+    dsc_fn = compat.shard_map(
+        dsc_op, mesh=mesh,
+        in_specs=(cell, cell, cell, P(None, None), P("model")),
+        out_specs=P(rows, None))
+    wc_fn = compat.shard_map(
+        wc_op, mesh=mesh,
+        in_specs=(cell, cell, cell, P(None, None), P(rows, None)),
         out_specs=P("model"))
     return dsc_fn, wc_fn
 

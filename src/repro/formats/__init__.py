@@ -10,6 +10,11 @@ Importing this package registers the built-in formats:
 
 ``formats.select`` picks one per dataset from inspector statistics with an
 autotune fallback; engines reach it via ``LifeConfig(format="auto")``.
+
+``formats.shard`` composes the above: an (R x C) mesh partition whose cells
+are inner ``coo``/``sell`` encodes (DESIGN.md §9).  It satisfies the
+PhiFormat contract but is *not* a registered leaf format — what the
+registry sees are the ``shard``/``shard-sell`` executors consuming it.
 """
 from repro.formats.base import (FORMATS, FORMAT_VERSION, FormatPlan,
                                 PhiFormat, canonical_triples, format_names,
@@ -17,9 +22,10 @@ from repro.formats.base import (FORMATS, FORMAT_VERSION, FormatPlan,
 from repro.formats.alto import AltoPhi
 from repro.formats.coo import CooPhi
 from repro.formats.sell import SellPhi
+from repro.formats.shard import ShardPhi, partition_cuts
 
 __all__ = [
     "FORMATS", "FORMAT_VERSION", "FormatPlan", "PhiFormat",
     "canonical_triples", "format_names", "get_format", "register_format",
-    "AltoPhi", "CooPhi", "SellPhi",
+    "AltoPhi", "CooPhi", "SellPhi", "ShardPhi", "partition_cuts",
 ]

@@ -53,13 +53,35 @@ DEFAULT_SELL_REJECT = 4.0
 _FORMAT_EXECUTORS = {"coo": None, "sell": "kernel-sell", "alto": "alto"}
 
 
+def _mesh_cells(config) -> int:
+    return (getattr(config, "shard_rows", 1)
+            * getattr(config, "shard_cols", 1))
+
+
 def executor_for(format_name: str, config) -> str:
-    """Registry name that runs a format (COO defers to config.executor)."""
+    """Registry name that runs a format.
+
+    Resolution order: (1) a multi-cell mesh request
+    (``shard_rows * shard_cols > 1``) maps to the format's mesh executor
+    from the registry's ``mesh=`` metadata — asking for a partition is the
+    strongest signal, so it wins even over an explicit single-device
+    executor; (2) an explicitly configured executor that itself consumes
+    the format (so ``executor="shard-sell", format="sell"`` runs the
+    sharded path on a 1x1 mesh, not ``kernel-sell``); (3) the static
+    single-device mapping above (COO defers to config.executor)."""
     if format_name not in _FORMAT_EXECUTORS:
         raise ValueError(
             f"format must be one of {format_names()}, got {format_name!r}")
+    from repro.core.registry import REGISTRY
+    requested = getattr(config, "executor", "opt")
+    if _mesh_cells(config) > 1:
+        sharded = REGISTRY.mesh_executor_for(format_name)
+        if sharded is not None:
+            return sharded
+    if requested in REGISTRY and REGISTRY.consumes(requested) == format_name:
+        return requested
     mapped = _FORMAT_EXECUTORS[format_name]
-    return getattr(config, "executor", "opt") if mapped is None else mapped
+    return requested if mapped is None else mapped
 
 
 def _geometry(config) -> Tuple[int, int]:
@@ -145,11 +167,19 @@ def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
 
 
 def resolve_format(phi: PhiTensor, problem, config, cache=None,
-                   allowed: Optional[Tuple[str, ...]] = None) -> FormatPlan:
+                   allowed: Optional[Tuple[str, ...]] = None,
+                   mesh_aware: bool = True) -> FormatPlan:
     """Engine entry point: honor an explicit ``config.format`` or select.
 
     ``allowed`` restricts the candidate set (the batched engine passes the
-    vmappable subset — SELL widths are per-subject static shapes).
+    vmappable subset — SELL widths are per-subject static shapes).  Under a
+    multi-cell mesh request (``shard_rows * shard_cols > 1``) the "auto"
+    candidate set is further restricted to formats with a registered mesh
+    executor — alto has no sharded path, so selecting it would silently
+    drop the requested partitioning.  Callers for whom the mesh is
+    placement-only (the batched engine: ``shard_rows/cols`` just
+    device_put the stacked operands, no mesh executor runs) pass
+    ``mesh_aware=False`` to keep the full candidate set.
     """
     fmt = getattr(config, "format", "coo")
     row_tile, slot_tile = _geometry(config)
@@ -163,9 +193,20 @@ def resolve_format(phi: PhiTensor, problem, config, cache=None,
             raise ValueError(
                 f"format {fmt!r} is not supported here (allowed: {allowed})")
         return FormatPlan(fmt, "explicit", params)
+    candidates = tuple(allowed) if allowed is not None else ("coo", "sell",
+                                                             "alto")
+    if mesh_aware and _mesh_cells(config) > 1:
+        from repro.core.registry import REGISTRY
+        mesh_ok = tuple(f for f in candidates
+                        if REGISTRY.mesh_executor_for(f) is not None)
+        if not mesh_ok:
+            raise ValueError(
+                f"no candidate format in {candidates} has a mesh executor "
+                f"(shard_rows x shard_cols = {_mesh_cells(config)})")
+        candidates = mesh_ok
     return choose_format(
         phi, problem.dictionary, row_tile=row_tile, slot_tile=slot_tile,
-        allowed=tuple(allowed) if allowed is not None else ("coo", "sell", "alto"),
+        allowed=candidates,
         sell_accept=getattr(config, "sell_accept", DEFAULT_SELL_ACCEPT),
         sell_reject=getattr(config, "sell_reject", DEFAULT_SELL_REJECT),
         cache=cache)

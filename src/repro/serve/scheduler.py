@@ -44,6 +44,21 @@ Time-slicing
 Each ``tick()`` serves the most urgent bucket for at most ``slice_iters``
 iterations: earliest deadline first, then highest priority, then the bucket
 that has been served least (so starvation is bounded by the slice length).
+
+Mesh slices
+-----------
+A job may request a device-mesh slice (``Job.mesh = (R, C)``): its solve
+runs on the sharded executor for its format — resolved from the registry's
+``mesh=``/``consumes=`` metadata (``shard`` for coo, ``shard-sell`` for
+sell).  Mesh jobs name their cell format explicitly: ``format="auto"``
+would make the executed topology depend on a selection the intake path
+never ran, so it is rejected at submit rather than resolved inconsistently.
+Mesh jobs get solo buckets keyed by their topology: the mesh is a per-job
+placement, and the sharded operand layouts are per-subject static shapes
+that cannot stack under vmap.  ``submit`` validates the slice fits the
+available devices, and the per-bucket engine config threads
+``shard_rows``/``shard_cols`` through so plan-cache keys (which include the
+mesh shape and device count) hit on re-buckets of the same topology.
 """
 from __future__ import annotations
 
@@ -53,11 +68,13 @@ import itertools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batched import BatchedLifeEngine
 from repro.core.life import LifeConfig, LifeEngine
+from repro.core.registry import REGISTRY
 from repro.core.plan_cache import PlanCache
 from repro.core.sbbnnls import SbbnnlsState
 from repro.data.dmri import LifeProblem
@@ -68,6 +85,13 @@ from repro.data.dmri import LifeProblem
 BATCHABLE_FORMATS = ("auto", "coo", "alto")
 
 _SOLO_FORMATS = ("sell",)
+
+
+def _is_solo(fmt: str, mesh: Optional[Tuple[int, int]]) -> bool:
+    """Solo-bucket predicate: SELL operands cannot stack under vmap, and a
+    mesh slice is a per-job placement — either way the job never shares an
+    engine.  Single definition for both the bucket key and the bucket."""
+    return fmt in _SOLO_FORMATS or mesh is not None
 
 
 def dataset_key(problem: LifeProblem) -> str:
@@ -104,6 +128,9 @@ class Job:
     priority: int = 0                     # higher runs sooner (tie-break)
     deadline: Optional[float] = None      # absolute time.monotonic() seconds
     format: str = "auto"
+    # (R, C) device-mesh slice request; None = single-device engines.
+    # Mesh jobs run the sharded executor for their format in a solo bucket.
+    mesh: Optional[Tuple[int, int]] = None
     submitted_at: float = 0.0
     # -- progress (owned by the scheduler) --------------------------------
     state: Optional[SbbnnlsState] = None
@@ -130,10 +157,12 @@ class Job:
 class _Bucket:
     """Jobs sharing one batch-compatibility class + their cached engine."""
 
-    def __init__(self, key: Tuple, fmt: str, arrival: int):
+    def __init__(self, key: Tuple, fmt: str, arrival: int,
+                 mesh: Optional[Tuple[int, int]] = None):
         self.key = key
         self.format = fmt
-        self.solo = fmt in _SOLO_FORMATS
+        self.mesh = mesh
+        self.solo = _is_solo(fmt, mesh)
         self.jobs: List[Job] = []
         self.iters_served = 0             # virtual time for fairness
         self.arrival = arrival
@@ -149,7 +178,14 @@ class _Bucket:
 
     # -- engine construction (memoized on the member set) ------------------
     def _config(self, base: LifeConfig) -> LifeConfig:
-        return dataclasses.replace(base, format=self.format)
+        cfg = dataclasses.replace(base, format=self.format)
+        if self.mesh is not None:
+            R, C = self.mesh
+            # submit validated the format has a mesh executor
+            cfg = dataclasses.replace(
+                cfg, shard_rows=R, shard_cols=C,
+                executor=REGISTRY.mesh_executor_for(self.format))
+        return cfg
 
     def engine(self, base: LifeConfig, cache: PlanCache):
         sig = tuple(j.job_id for j in self.jobs)
@@ -240,6 +276,23 @@ class Scheduler:
             raise ValueError(
                 f"format must be one of "
                 f"{BATCHABLE_FORMATS + _SOLO_FORMATS}, got {job.format!r}")
+        if job.mesh is not None:
+            R, C = job.mesh
+            if R < 1 or C < 1:
+                raise ValueError(f"mesh shape must be positive, "
+                                 f"got {job.mesh}")
+            if R * C > len(jax.devices()):
+                raise ValueError(
+                    f"mesh slice ({R}, {C}) needs {R * C} devices, "
+                    f"have {len(jax.devices())}")
+            if REGISTRY.mesh_executor_for(job.format) is None:
+                meshable = tuple(
+                    f for f in BATCHABLE_FORMATS + _SOLO_FORMATS
+                    if REGISTRY.mesh_executor_for(f))
+                raise ValueError(
+                    f"format {job.format!r} has no mesh executor; mesh "
+                    f"jobs must name an explicit cell format from "
+                    f"{meshable}")
         if not job.dataset:
             job.dataset = dataset_key(job.problem)
         if not job.dict_digest:
@@ -253,9 +306,8 @@ class Scheduler:
     def _bucket_key(self, job: Job) -> Tuple:
         phi = job.problem.phi
         return (phi.n_voxels, phi.n_fibers, job.problem.dictionary.shape[1],
-                job.dict_digest, job.format,
-                # solo formats never share an engine
-                job.job_id if job.format in _SOLO_FORMATS else "")
+                job.dict_digest, job.format, job.mesh,
+                job.job_id if _is_solo(job.format, job.mesh) else "")
 
     def _admit(self) -> None:
         """Move queued jobs into buckets — the continuous-batching step:
@@ -265,7 +317,8 @@ class Scheduler:
             key = self._bucket_key(job)
             if key not in self._buckets:
                 self._buckets[key] = _Bucket(key, job.format,
-                                             next(self._arrivals))
+                                             next(self._arrivals),
+                                             mesh=job.mesh)
             self._buckets[key].jobs.append(job)
             job.status = "running"
         self._queue.clear()

@@ -79,7 +79,8 @@ class LifeService:
     def submit(self, problem: LifeProblem, *, job_id: Optional[str] = None,
                n_iters: Optional[int] = None, priority: Optional[int] = None,
                deadline: Optional[float] = None,
-               format: Optional[str] = None) -> str:
+               format: Optional[str] = None,
+               mesh: Optional[Tuple[int, int]] = None) -> str:
         """Queue one solve; returns its job id.
 
         ``deadline`` is seconds from now (converted to an absolute monotonic
@@ -90,9 +91,13 @@ class LifeService:
         checkpointed values (extend a job with a larger ``n_iters``, bump
         its ``priority``, set a fresh ``deadline``); omitted ones are
         restored from the checkpoint, including the deadline's remaining
-        budget.  The format is the exception: the state's trajectory is only
-        reproducible under the format it ran on, so a conflicting explicit
-        ``format`` is an error rather than a silent override."""
+        budget.  The format and the mesh slice are the exceptions: the
+        state's trajectory is only reproducible under the format *and mesh
+        topology* it ran on, so a conflicting explicit ``format`` or
+        ``mesh`` is an error rather than a silent override.
+
+        ``mesh=(R, C)`` admits the job onto a device-mesh slice: its solve
+        runs the sharded executor for its format (DESIGN.md §9)."""
         if job_id is None:
             taken = ({j.job_id for j in self.scheduler.jobs()}
                      | set(self._completed) | set(self._resumable))
@@ -106,6 +111,7 @@ class LifeService:
                   priority=0 if priority is None else priority,
                   deadline=None if deadline is None else now + deadline,
                   format=self.config.format if format is None else format,
+                  mesh=None if mesh is None else tuple(mesh),
                   submitted_at=now, dataset=dataset_key(problem))
         if job_id in self._resumable:
             arrays, meta = self._resumable[job_id]
@@ -120,9 +126,19 @@ class LifeService:
                     f"resume of job {job_id!r} rejected: checkpointed state "
                     f"ran under format {ck_format!r}, resubmitted with "
                     f"{format!r}")
-            # validation passed — consume the entry and adopt the state
-            del self._resumable[job_id]
+            ck_mesh = meta.get("mesh")
+            ck_mesh = None if ck_mesh is None else tuple(int(x)
+                                                         for x in ck_mesh)
+            if mesh is not None and tuple(mesh) != ck_mesh:
+                raise ValueError(
+                    f"resume of job {job_id!r} rejected: checkpointed state "
+                    f"ran on mesh {ck_mesh}, resubmitted with {tuple(mesh)}")
+            # validation passed — adopt the state (the entry is consumed
+            # only once scheduler.submit accepts the job: its own
+            # validation, e.g. the restored mesh not fitting this host's
+            # devices, must leave the checkpointed state re-adoptable)
             job.format = ck_format
+            job.mesh = ck_mesh
             job.state = SbbnnlsState(w=jnp.asarray(arrays["w"]),
                                      it=jnp.asarray(arrays["it"]),
                                      loss=jnp.asarray(arrays["loss"]))
@@ -137,6 +153,7 @@ class LifeService:
             if "losses" in arrays:
                 job.losses = [np.asarray(arrays["losses"])]
         self.scheduler.submit(job)
+        self._resumable.pop(job_id, None)
         return job_id
 
     # -- driving -----------------------------------------------------------
@@ -190,10 +207,21 @@ class LifeService:
             meta[job.job_id] = dict(
                 done=job.done, n_iters=job.n_iters, priority=job.priority,
                 format=job.format, dataset=job.dataset,
+                mesh=None if job.mesh is None else list(job.mesh),
                 # deadlines are monotonic-clock absolutes that don't survive
                 # a restart; persist the remaining budget instead
                 deadline_remaining=(None if job.deadline is None
                                     else job.deadline - now))
+        # carry restored-but-unclaimed states forward: without this, a job
+        # nobody has resubmitted yet would fall out of retention once other
+        # jobs rotate `keep` fresh snapshots past its last one.  Deliberate
+        # trade-off: abandoned tenants ride along in every snapshot (a few
+        # arrays each) until operators clear the checkpoint dir — durability
+        # over disk economy; revisit with a TTL if snapshots grow hot
+        for job_id, (arrays, m) in self._resumable.items():
+            if job_id not in tree:
+                tree[job_id] = {k: np.asarray(v) for k, v in arrays.items()}
+                meta[job_id] = m
         return ckpt.save(self.ckpt_dir, self._tick, tree,
                          meta={"jobs": meta}, keep=self.keep)
 

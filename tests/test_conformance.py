@@ -10,9 +10,20 @@ time, so drift between subsystems fails here even when each subsystem's own
 tests pass.
 
 This is the contract new executors/formats must pass (README "Serving").
+
+The sharded executors additionally run the whole contract per mesh
+topology: in-process over every (R, C) the current device count admits
+(the CI multi-device lane forces 8 host devices so the 2- and 8-device
+meshes execute there), and in a subprocess that forces 8 virtual CPU
+devices regardless of the parent's topology (slow lane).
 """
 import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -84,6 +95,118 @@ def test_sbbnnls_trajectories_match(executor, fmt, tiny_problem):
                                atol=2e-3, err_msg=f"{executor}/{fmt} weights")
 
 
+# ----------------------------------------------------------------------------
+# sharded executors per mesh topology (1 / 2 / 8 devices)
+# ----------------------------------------------------------------------------
+
+#: mesh shapes the sharded contract is held on; meshes larger than the
+#: current device count skip in-process and run in the forced-8 subprocess
+MESHES = ((1, 1), (2, 1), (4, 2))
+
+SHARD_EXECUTORS = tuple(n for n in REGISTRY.names()
+                        if REGISTRY.mesh_executor_for(REGISTRY.consumes(n))
+                        == n)
+
+
+def _mesh_params():
+    n = len(jax.devices())
+    return [pytest.param(R, C, marks=pytest.mark.skipif(
+        R * C > n, reason=f"needs {R * C} devices, have {n}"))
+        for R, C in MESHES]
+
+
+def test_sharded_executors_enumerate_automatically():
+    """The matrix derives the sharded rows from registry metadata alone —
+    the acceptance contract that `shard-sell` is reached via
+    ``executors_for_format("sell")``, not via a hand-kept list."""
+    assert "shard" in REGISTRY.executors_for_format("coo")
+    assert "shard-sell" in REGISTRY.executors_for_format("sell")
+    assert set(SHARD_EXECUTORS) == {"shard", "shard-sell"}
+    assert {("shard", "coo"), ("shard-sell", "sell")} <= set(MATRIX)
+
+
+@pytest.mark.parametrize("R,C", _mesh_params())
+@pytest.mark.parametrize("executor", SHARD_EXECUTORS)
+def test_sharded_matvec_matches_oracle_per_mesh(executor, R, C, tiny_problem,
+                                                tiny_dense, rng):
+    """DSC and WC of every sharded executor agree with the dense oracle on
+    every admissible mesh topology."""
+    p = tiny_problem
+    fmt = REGISTRY.consumes(executor)
+    cfg = dataclasses.replace(_CFG, executor=executor, format=fmt,
+                              shard_rows=R, shard_cols=C)
+    ex = (REGISTRY.create(executor, p.phi, p, cfg, PlanCache(""))
+          if fmt == "coo" else create_for_format(p.phi, p, cfg, PlanCache("")))
+    assert ex.name == executor
+    m = np.asarray(tiny_dense, np.float64)
+    n_theta = p.dictionary.shape[1]
+    w = jnp.asarray(rng.uniform(0, 1, p.phi.n_fibers), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(p.phi.n_voxels, n_theta)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ex.matvec(w), np.float64).reshape(-1),
+        m @ np.asarray(w, np.float64), rtol=2e-4, atol=1e-5,
+        err_msg=f"{executor} ({R},{C}) matvec")
+    np.testing.assert_allclose(
+        np.asarray(ex.rmatvec(y), np.float64),
+        m.T @ np.asarray(y, np.float64).reshape(-1), rtol=2e-4, atol=1e-4,
+        err_msg=f"{executor} ({R},{C}) rmatvec")
+
+
+@pytest.mark.slow
+def test_sharded_conformance_on_8_forced_devices(tmp_path):
+    """The full sharded contract under XLA_FLAGS-forced 8 CPU devices:
+    both executors x (1, 2, 8)-device meshes vs the dense oracle
+    (atol=1e-5) and cross-executor SBBNNLS trajectories vs naive."""
+    code = """
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.data.dmri import synth_connectome
+        from repro.core.std import materialize_dense
+        from repro.core.life import LifeConfig, LifeEngine
+        p = synth_connectome(n_fibers=64, n_theta=16, n_atoms=24,
+                             grid=(10, 10, 10), seed=1)
+        m = np.asarray(materialize_dense(p.phi, p.dictionary), np.float64)
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.uniform(0, 1, p.phi.n_fibers), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(p.phi.n_voxels, 16)), jnp.float32)
+        base = LifeConfig(executor="opt", plan_cache_dir="", slot_tile=16,
+                          row_tile=8, n_iters=8)
+        w_ref, l_ref = LifeEngine(
+            p, dataclasses.replace(base, executor="naive")).run()
+        for R, C in ((1, 1), (2, 1), (4, 2)):
+            for name, fmt in (("shard", "coo"), ("shard-sell", "sell")):
+                cfg = dataclasses.replace(base, executor=name, format=fmt,
+                                          shard_rows=R, shard_cols=C)
+                eng = LifeEngine(p, cfg)
+                np.testing.assert_allclose(
+                    np.asarray(eng.matvec(w), np.float64).reshape(-1),
+                    m @ np.asarray(w, np.float64), rtol=2e-4, atol=1e-5,
+                    err_msg=f"{name} ({R},{C}) matvec")
+                np.testing.assert_allclose(
+                    np.asarray(eng.rmatvec(y), np.float64),
+                    m.T @ np.asarray(y, np.float64).reshape(-1),
+                    rtol=2e-4, atol=1e-4, err_msg=f"{name} ({R},{C}) rmatvec")
+                ww, ll = eng.run()
+                np.testing.assert_allclose(ll, l_ref, rtol=2e-3,
+                                           err_msg=f"{name} ({R},{C}) losses")
+                np.testing.assert_allclose(
+                    np.asarray(ww), np.asarray(w_ref), rtol=2e-2, atol=2e-3,
+                    err_msg=f"{name} ({R},{C}) weights")
+        print("SHARD_CONFORM_OK")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"),
+               REPRO_PLAN_CACHE=str(tmp_path / "plans"))
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARD_CONFORM_OK" in proc.stdout
+
+
 def test_invalid_pairs_are_rejected():
     """A format request never silently runs on a mismatched executor:
     non-COO formats force their own executor through create_for_format."""
@@ -94,3 +217,14 @@ def test_invalid_pairs_are_rejected():
     assert fsel.executor_for("coo", _CFG) == _CFG.executor
     with pytest.raises(ValueError):
         fsel.executor_for("csr", _CFG)
+    # a configured executor that itself consumes the format wins
+    assert fsel.executor_for(
+        "sell", dataclasses.replace(_CFG, executor="shard-sell")) \
+        == "shard-sell"
+    # a multi-cell mesh request maps to the format's mesh executor
+    mesh_cfg = dataclasses.replace(_CFG, shard_rows=2, shard_cols=2)
+    assert fsel.executor_for("coo", mesh_cfg) == "shard"
+    assert fsel.executor_for("sell", mesh_cfg) == "shard-sell"
+    # alto has no sharded path: the mapping falls through, and
+    # create_for_format refuses rather than silently dropping the mesh
+    assert fsel.executor_for("alto", mesh_cfg) == "alto"

@@ -58,6 +58,20 @@ def test_shard_boundaries_invariants(case, n_shards):
 
 
 @settings(max_examples=30, deadline=None)
+@given(sorted_ids(), st.integers(1, 12))
+def test_shard_boundaries_disjoint_and_covering(case, n_shards):
+    """The coefficient ranges partition [0, Nc): pairwise disjoint, their
+    union is everything, and every coefficient lands in exactly one shard
+    (the set-level statement of the §4.1.3 partition contract)."""
+    ids, _ = case
+    cuts = shard_boundaries(ids, n_shards)
+    ranges = [np.arange(cuts[i], cuts[i + 1]) for i in range(n_shards)]
+    assert sum(r.size for r in ranges) == ids.size
+    seen = np.concatenate(ranges) if ranges else np.zeros(0, np.int64)
+    np.testing.assert_array_equal(seen, np.arange(ids.size))
+
+
+@settings(max_examples=30, deadline=None)
 @given(sorted_ids(), st.integers(2, 8))
 def test_shard_boundaries_balance(case, n_shards):
     """Equal-nnz up to sub-vector granularity: no shard exceeds the ideal

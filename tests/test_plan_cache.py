@@ -181,3 +181,56 @@ def test_compaction_changes_key_and_misses(tmp_path, tiny_problem):
     problem2 = dataclasses.replace(tiny_problem, phi=compacted)
     eng2 = LifeEngine(problem2, cfg)
     assert eng2.cache_stats.misses == 2        # no false sharing
+
+
+# ----------------------------------------------------------------------------
+# ShardPlan: partition cuts keyed by mesh topology (DESIGN.md §9)
+# ----------------------------------------------------------------------------
+
+def test_shard_plan_roundtrip_and_warm_hit(tmp_path, tiny_problem,
+                                           monkeypatch):
+    """A warm cache hit rebuilds the partition without re-partitioning:
+    the second partition_cuts never calls shard_boundaries."""
+    from repro.formats import shard as FS
+    cache = PlanCache(str(tmp_path))
+    plan = FS.partition_cuts(tiny_problem.phi, 3, 2, cache=cache)
+    assert cache.stats.misses == 1
+    calls = []
+    orig = FS.shard_boundaries
+    monkeypatch.setattr(FS, "shard_boundaries",
+                        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    warm = FS.partition_cuts(tiny_problem.phi, 3, 2, cache=cache)
+    assert cache.stats.hits == 1 and calls == []
+    assert (warm.R, warm.C) == (plan.R, plan.C)
+    np.testing.assert_array_equal(warm.voxel_cuts, plan.voxel_cuts)
+    np.testing.assert_array_equal(warm.fiber_cuts, plan.fiber_cuts)
+
+
+def test_shard_plan_key_includes_mesh_and_devices():
+    """Regression (ISSUE 4): a sharded plan written on one topology must
+    miss cleanly on another — the key covers the mesh shape, the device
+    count, and the inner cell format."""
+    from repro.core.plan_cache import shard_plan_key
+    ids = (np.arange(10), np.arange(10) % 4, np.arange(10) % 3)
+    base = dict(sizes=(8, 4, 3), R=4, C=2, cell_format="coo", n_devices=8)
+    key = shard_plan_key(*ids, **base)
+    assert shard_plan_key(*ids, **base) == key                   # stable
+    for change in (dict(R=2), dict(C=1), dict(n_devices=1),
+                   dict(cell_format="sell"), dict(sizes=(8, 4, 4))):
+        assert shard_plan_key(*ids, **{**base, **change}) != key, change
+
+
+def test_shard_plan_mesh_shape_mismatch_is_clean_miss(tmp_path,
+                                                      tiny_problem):
+    """Full-stack: the same dataset partitioned for a different mesh shape
+    misses (and re-partitions) instead of loading the wrong cuts."""
+    from repro.formats.shard import partition_cuts
+    cache = PlanCache(str(tmp_path))
+    partition_cuts(tiny_problem.phi, 4, 2, cache=cache)
+    assert (cache.stats.hits, cache.stats.misses) == (0, 1)
+    plan = partition_cuts(tiny_problem.phi, 2, 1, cache=cache)
+    assert (cache.stats.hits, cache.stats.misses) == (0, 2)
+    assert (plan.R, plan.C) == (2, 1)
+    # and the original topology still hits its own entry
+    partition_cuts(tiny_problem.phi, 4, 2, cache=cache)
+    assert cache.stats.hits == 1

@@ -233,3 +233,120 @@ def test_checkpoint_roundtrip_includes_loss_history(tiny_problem, tmp_path):
     svc2.submit(tiny_problem, job_id="t", format="coo")
     _, losses = svc2.run()["t"]
     assert losses.shape == (18,)
+
+
+# ----------------------------------------------------------------------------
+# mesh slices (DESIGN.md §9): sharded executors behind the same scheduler
+# ----------------------------------------------------------------------------
+
+def test_mesh_jobs_get_solo_buckets_and_match_shard_engine(tiny_problem):
+    """A mesh job runs the sharded executor for its format in a solo bucket
+    and matches the direct engine exactly; an identical non-mesh job keeps
+    its own (batchable) bucket."""
+    import dataclasses
+    svc = LifeService(_cfg(), slice_iters=5)
+    plain = svc.submit(tiny_problem, n_iters=12, format="coo")
+    meshed = svc.submit(tiny_problem, n_iters=12, format="coo", mesh=(1, 1))
+    assert len(svc.scheduler._buckets) == 0
+    results = svc.run()
+    w_ref, l_ref = LifeEngine(
+        tiny_problem, dataclasses.replace(_cfg(), executor="shard",
+                                          shard_rows=1, shard_cols=1)).run(12)
+    w, losses = results[meshed]
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+    np.testing.assert_array_equal(losses, l_ref)
+    # the plain job matched its own engine too (different executor path)
+    w_plain, _ = results[plain]
+    np.testing.assert_allclose(np.asarray(w_plain), np.asarray(w_ref),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_mesh_job_validation(tiny_problem):
+    import jax
+    sched = Scheduler(_cfg())
+    with pytest.raises(ValueError, match="no mesh executor"):
+        sched.submit(Job(job_id="a", problem=tiny_problem, n_iters=4,
+                         format="alto", mesh=(1, 1)))
+    # "auto" would make the topology depend on selection the intake path
+    # never ran — mesh jobs must name their cell format explicitly
+    with pytest.raises(ValueError, match="explicit cell format"):
+        sched.submit(Job(job_id="a2", problem=tiny_problem, n_iters=4,
+                         format="auto", mesh=(1, 1)))
+    with pytest.raises(ValueError, match="devices"):
+        sched.submit(Job(job_id="b", problem=tiny_problem, n_iters=4,
+                         format="coo",
+                         mesh=(len(jax.devices()) + 1, 2)))
+    with pytest.raises(ValueError, match="positive"):
+        sched.submit(Job(job_id="c", problem=tiny_problem, n_iters=4,
+                         format="coo", mesh=(0, 1)))
+
+
+@pytest.mark.parametrize("fmt", ["coo", "sell"])
+def test_shard_job_interrupted_then_resumed_bit_compatible(fmt, tiny_problem,
+                                                           tmp_path):
+    """The ISSUE-4 satellite: kill-and-resume under the sharded executors
+    (same mesh topology) is bit-compatible with the uninterrupted run."""
+    cfg = _cfg(n_iters=24, slot_tile=16)
+    ref = LifeService(cfg, slice_iters=5)
+    jid = ref.submit(tiny_problem, job_id="tenant", n_iters=24, format=fmt,
+                     mesh=(1, 1))
+    w_ref, l_ref = ref.run()[jid]
+
+    ck = str(tmp_path / "svc")
+    svc = LifeService(cfg, ckpt_dir=ck, checkpoint_every=1, slice_iters=5)
+    svc.submit(tiny_problem, job_id="tenant", n_iters=24, format=fmt,
+               mesh=(1, 1))
+    svc.step()
+    svc.step()                                      # 10 of 24 iters, then die
+    assert svc.scheduler.job("tenant").done == 10
+    del svc                                         # the "kill"
+
+    svc2 = LifeService(cfg, ckpt_dir=ck, checkpoint_every=1, slice_iters=5)
+    assert svc2.resumable_jobs == ("tenant",)
+    # a conflicting mesh topology is rejected, like a conflicting format
+    with pytest.raises(ValueError, match="mesh"):
+        svc2.submit(tiny_problem, job_id="tenant", mesh=(2, 1))
+    svc2.submit(tiny_problem, job_id="tenant")      # mesh restored from ckpt
+    job = svc2.scheduler.job("tenant")
+    assert (job.done, job.mesh, job.format) == (10, (1, 1), fmt)
+    w_res, l_res = svc2.run()["tenant"]
+
+    np.testing.assert_array_equal(np.asarray(w_res), np.asarray(w_ref))
+    np.testing.assert_array_equal(l_res, l_ref)     # bit-compatible
+    assert l_res.shape == (24,)
+
+
+def test_failed_resume_submit_keeps_state_recoverable(tiny_problem,
+                                                      tmp_path, monkeypatch):
+    """If scheduler.submit rejects a restored job (e.g. the checkpointed
+    mesh doesn't fit this host's devices), the resumable entry must survive
+    so the state can still be re-adopted — and later checkpoints must keep
+    carrying it instead of rotating it out."""
+    import jax
+    ck = str(tmp_path / "svc")
+    svc = LifeService(_cfg(n_iters=24), ckpt_dir=ck, checkpoint_every=1,
+                      slice_iters=5)
+    svc.submit(tiny_problem, job_id="tenant", n_iters=24, format="coo",
+               mesh=(1, 1))
+    svc.step()
+    del svc
+
+    svc2 = LifeService(_cfg(n_iters=24), ckpt_dir=ck, checkpoint_every=1,
+                       slice_iters=5)
+    assert svc2.resumable_jobs == ("tenant",)
+    # simulate the checkpointed topology not fitting this host
+    monkeypatch.setattr(jax, "devices", lambda *a, **k: [])
+    with pytest.raises(ValueError, match="devices"):
+        svc2.submit(tiny_problem, job_id="tenant")
+    monkeypatch.undo()
+    assert svc2.resumable_jobs == ("tenant",)       # state not consumed
+    # other work checkpoints `keep` times; the unclaimed state must ride
+    # along in every snapshot instead of falling out of retention
+    svc2.submit(tiny_problem, job_id="other", n_iters=8, format="coo")
+    svc2.run()
+    del svc2
+    svc3 = LifeService(_cfg(n_iters=24), ckpt_dir=ck, checkpoint_every=1,
+                       slice_iters=5)
+    assert "tenant" in svc3.resumable_jobs
+    svc3.submit(tiny_problem, job_id="tenant")
+    assert svc3.scheduler.job("tenant").done == 5   # adopted mid-flight
