@@ -1,0 +1,89 @@
+"""Gate a benchmark JSON against a checked-in baseline.
+
+    python benchmarks/check_regression.py baseline.json new.json --factor 2.0
+
+Fails (exit 1) when any row named in the baseline is missing from the new
+run (a gate must not pass by silently dropping coverage) or is more than
+``--factor`` times slower after machine-speed normalization.
+
+Normalization: both payloads carry ``calibration_us`` — the median time of
+a fixed interpret-mode kernel call on the machine that produced them.  The
+baseline's times are rescaled by the calibration ratio before the factor
+is applied; without this, a baseline captured on one CI machine generation
+would gate pure hardware noise on the next.  The scale is clamped to
+[1.0, 4.0]: a slower machine loosens the gate proportionally, but a faster
+(or luckily-timed) calibration never *tightens* it — the gate's job is
+catching real slowdowns, not manufacturing them from calibration noise.
+"""
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {r["name"]: float(r["us_per_call"]) for r in payload["results"]}
+    return payload, rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max allowed normalized slowdown (default 2.0)")
+    args = ap.parse_args(argv)
+
+    base_payload, base = load(args.baseline)
+    new_payload, new = load(args.new)
+
+    for p, tag in ((base_payload, "baseline"), (new_payload, "new")):
+        print(f"{tag}: jax {p.get('jax_version')} {p.get('backend')}"
+              f"x{p.get('device_count')} tables={p.get('tables')} "
+              f"digest={p.get('config_digest')}")
+    missing_tables = (set(base_payload.get("tables", []))
+                      - set(new_payload.get("tables", [])))
+    if missing_tables:
+        print(f"FAIL: new run did not execute baseline table(s) "
+              f"{sorted(missing_tables)} — results are not comparable")
+        return 1
+
+    scale = 1.0
+    base_cal = base_payload.get("calibration_us")
+    new_cal = new_payload.get("calibration_us")
+    if base_cal and new_cal:
+        scale = min(4.0, max(1.0, float(new_cal) / float(base_cal)))
+    print(f"calibration: baseline={base_cal} new={new_cal} scale={scale:.3f}")
+
+    failures = []
+    print(f"{'name':40s} {'base_us':>10s} {'new_us':>10s} {'ratio':>7s}")
+    for name, base_us in sorted(base.items()):
+        if name not in new:
+            failures.append(f"missing row: {name}")
+            print(f"{name:40s} {base_us:10.1f} {'MISSING':>10s}")
+            continue
+        allowed = base_us * scale
+        ratio = new[name] / allowed if allowed > 0 else float("inf")
+        flag = ""
+        if ratio > args.factor:
+            failures.append(f"{name}: {new[name]:.1f}us vs allowed "
+                            f"{allowed:.1f}us x {args.factor} "
+                            f"(ratio {ratio:.2f})")
+            flag = "  << REGRESSION"
+        print(f"{name:40s} {base_us:10.1f} {new[name]:10.1f} "
+              f"{ratio:7.2f}{flag}")
+    for name in sorted(set(new) - set(base)):
+        print(f"{name:40s} {'-':>10s} {new[name]:10.1f}    new")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s) vs {args.baseline}:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nOK: {len(base)} rows within {args.factor}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

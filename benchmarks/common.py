@@ -1,7 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing, CSV emission, JSON collection.
 
 Every table prints ``name,us_per_call,derived`` rows (derived column holds
-the table-specific metric: speedup, bytes, iterations/s, ...).
+the table-specific metric: speedup, bytes, iterations/s, ...).  Rows are
+also collected in :data:`RESULTS` so ``benchmarks/run.py --json`` can emit
+the machine-readable trajectory CI gates on.
+
+Timing protocol: ``warmup`` blocking calls (compile + cache warm), then the
+**median** of ``repeats`` blocking calls — the median (not the mean) so one
+scheduler hiccup can't poison a row the regression gate compares against.
+``$REPRO_BENCH_WARMUP`` / ``$REPRO_BENCH_REPEATS`` override every call
+site's own values, letting CI harden the gate lane (more repeats) without
+touching per-table code.
 """
 import os
 import sys
@@ -11,9 +20,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
+#: rows collected for --json: dicts of name / us_per_call / derived
+RESULTS = []
+
+
+def reset_results():
+    RESULTS.clear()
+
 
 def time_fn(fn, *args, warmup=2, repeats=5):
     """Median wall time of a blocking call, in microseconds."""
+    warmup = int(os.environ.get("REPRO_BENCH_WARMUP", warmup))
+    repeats = max(1, int(os.environ.get("REPRO_BENCH_REPEATS", repeats)))
     for _ in range(warmup):
         _block(fn(*args))
     times = []
@@ -33,7 +51,30 @@ def _block(out):
 
 
 def emit(name, us, derived=""):
+    RESULTS.append(dict(name=str(name), us_per_call=float(us),
+                        derived=str(derived)))
     print(f"{name},{us:.1f},{derived}")
+
+
+def calibration_us():
+    """Median time of a fixed Pallas-interpret SELL kernel call — the
+    machine-speed yardstick recorded in the JSON payload.
+
+    ``check_regression.py`` rescales a baseline captured on different
+    hardware by the calibration ratio before applying its slowdown factor
+    (an absolute 2x gate across unknown CI machine generations would
+    otherwise be pure noise).  The yardstick is deliberately the same cost
+    family as the gated rows — interpret-mode kernel dispatch — because a
+    plain XLA matmul does not track it: machines with identical matmul
+    throughput can differ 2x in dispatch overhead."""
+    import jax.numpy as jnp
+    from repro.kernels.dsc import dsc_sell_pallas
+    atoms = jnp.zeros((64, 32), jnp.int32)
+    scaled = jnp.ones((64, 32), jnp.float32)
+    d = jnp.ones((32, 128), jnp.float32)
+    f = jax.jit(lambda a, s: dsc_sell_pallas(a, s, d, row_tile=8,
+                                             slot_tile=16, interpret=True))
+    return time_fn(f, atoms, scaled, warmup=2, repeats=5)
 
 
 def problem(scale="bench"):

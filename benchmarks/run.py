@@ -1,16 +1,32 @@
 """Benchmark harness: one module per paper table.
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
-    PYTHONPATH=src python -m benchmarks.run [table ...]
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the machine-readable payload CI's bench-smoke lane gates on
+(see benchmarks/check_regression.py):
+
+    PYTHONPATH=src python -m benchmarks.run [--json out.json] [table ...]
+
+JSON schema (version 1): environment fields (jax version, backend, device
+count), a ``config_digest`` identifying the run configuration, a
+``calibration_us`` machine-speed yardstick, and the ``results`` rows —
+exactly the CSV rows as objects.
 """
+import argparse
+import hashlib
+import json
+import os
 import sys
 import time
 
+import jax
+
+from benchmarks import common
 from benchmarks import (table2_restructuring, table3_partitioning,
                         table4_opt_combos, table5_scaling,
                         table8_kernel_ladder, table9_param_sweep,
                         table10_end2end, table11_batched, table12_formats,
-                        table13_service, table14_shard_scaling)
+                        table13_service, table14_shard_scaling,
+                        table15_tuning)
 
 TABLES = {
     "table2": table2_restructuring,
@@ -24,16 +40,65 @@ TABLES = {
     "table12": table12_formats,       # beyond-paper: Phi format comparison
     "table13": table13_service,       # beyond-paper: serving under open-loop load
     "table14": table14_shard_scaling, # beyond-paper: sharded subjects/sec scaling
+    "table15": table15_tuning,        # beyond-paper: tuned vs frozen kernel params
 }
 
+SCHEMA_VERSION = 1
 
-def main() -> None:
-    wanted = sys.argv[1:] or list(TABLES)
+
+def config_digest(wanted) -> str:
+    """Informational identity of the run configuration (not its
+    measurements): the table set, the software/platform, and the
+    timing-protocol env overrides.  Shown by check_regression.py so a
+    surprising gate result can be traced to a configuration difference at
+    a glance; the gate's own comparability check is the ``tables`` field
+    (baseline tables must all be present in the new run)."""
+    h = hashlib.sha256()
+    h.update(("|".join(sorted(wanted))).encode())
+    h.update(jax.__version__.encode())
+    h.update(jax.default_backend().encode())
+    h.update(str(len(jax.devices())).encode())
+    for var in ("REPRO_BENCH_WARMUP", "REPRO_BENCH_REPEATS"):
+        h.update(f"{var}={os.environ.get(var, '')}".encode())
+    return h.hexdigest()[:16]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Run benchmark tables; CSV to stdout, optional JSON.")
+    ap.add_argument("tables", nargs="*", metavar="table",
+                    help=f"subset to run (default: all of {sorted(TABLES)})")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args(argv)
+    unknown = [t for t in args.tables if t not in TABLES]
+    if unknown:
+        ap.error(f"unknown tables {unknown}; choose from {sorted(TABLES)}")
+    wanted = args.tables or list(TABLES)
+
+    common.reset_results()
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()
         TABLES[name].run()
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        payload = dict(
+            schema=SCHEMA_VERSION,
+            jax_version=jax.__version__,
+            backend=jax.default_backend(),
+            device_count=len(jax.devices()),
+            tables=sorted(wanted),
+            config_digest=config_digest(wanted),
+            calibration_us=common.calibration_us(),
+            results=common.RESULTS,
+        )
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(common.RESULTS)} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

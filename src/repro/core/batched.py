@@ -113,6 +113,9 @@ class BatchedLifeEngine:
             getattr(config, "plan_cache_dir", None),
             getattr(config, "plan_cache_max_bytes", None))
         self.format_plan = None       # set when config.format != "coo"
+        self.tune_plan = None         # set when config.tune != "off"
+        from repro.tune.tuner import validate_config as _validate_tune
+        _validate_tune(config)
         if getattr(config, "compact_every", 0) > 0:
             raise ValueError(
                 "weight compaction is per-subject (changes Nc mid-run) and "
@@ -194,8 +197,27 @@ class BatchedLifeEngine:
             f"executor {name!r} is not vmappable across subjects "
             f"(supported: {sorted(_BATCH_RECIPES) + ['auto']})")
 
+    def _resolve_tuning(self) -> str:
+        """Resolve the tune plan on the first subject (persistent-cached);
+        returns the storage dtype the stacked operands are built under.
+
+        The batched recipes are pure-jnp (no Pallas tile axes), so the
+        searched axis that reaches this engine is the compute dtype; tile
+        winners in the plan simply don't apply.  Routing through the same
+        resolver keeps the plan-cache entry shared with single-subject
+        engines on the same dataset/backend."""
+        cfg = self.config
+        if getattr(cfg, "tune", "off") == "off":
+            cd = getattr(cfg, "compute_dtype", "fp32")
+            return "fp32" if cd == "auto" else cd
+        from repro.tune.tuner import resolve_plan
+        self.tune_plan = resolve_plan(cfg.executor, self.problems[0].phi,
+                                      self.problems[0], cfg, self.cache)
+        return self.tune_plan.compute_dtype
+
     def _build(self) -> None:
         t0 = time.perf_counter()
+        self._compute_dtype = self._resolve_tuning()
         dsc_dim, wc_dim, self._dsc_fn, self._wc_fn = self._resolve_recipe()
         nc_max = max(p.phi.n_coeffs for p in self.problems)
         self.nc_padded = nc_max
@@ -217,14 +239,31 @@ class BatchedLifeEngine:
         self.phi_wc = _stack_phis(
             [prep(phi, wc_dim, self._wc_fn) for phi in phis])
         self.b = jnp.stack([p.b for p in self.problems])
+        self._d_op = self.dictionary
+        if self._compute_dtype == "bf16":
+            # bf16 storage of the static operands (stacked Phi values + the
+            # shared dictionary); w/Y/b stay fp32 so every product promotes
+            # to fp32 before the segment reductions (DESIGN.md §10.3)
+            store = jnp.bfloat16
+            self.phi_dsc = dataclasses.replace(
+                self.phi_dsc, values=self.phi_dsc.values.astype(store))
+            self.phi_wc = dataclasses.replace(
+                self.phi_wc, values=self.phi_wc.values.astype(store))
+            self._d_op = jnp.asarray(self.dictionary).astype(store)
         if self.mesh is not None:
             self._place_on_mesh()
         self._runner = jax.jit(self._make_runner(),
                                static_argnames=("n_iters",))
         self.inspector_seconds += time.perf_counter() - t0
 
+    @property
+    def resolved_compute_dtype(self) -> str:
+        """Storage dtype the stacked operands were built under (the tune
+        plan's winner when ``compute_dtype="auto"`` was searched)."""
+        return self._compute_dtype
+
     def _make_runner(self):
-        d = self.dictionary
+        d = self._d_op
         dsc_fn, wc_fn = self._dsc_fn, self._wc_fn
 
         def run_batch(phi_dsc, phi_wc, b, states, *, n_iters: int):

@@ -67,6 +67,20 @@ class LifeConfig:
     # dataset via formats/select.py, FormatPlan-cached).  DESIGN.md §7.
     format: str = "coo"
     slot_tile: int = 32             # SELL slots consumed per kernel grid step
+    # Kernel autotuning (DESIGN.md §10): "off" runs the frozen constants
+    # above; "cached" replays a persisted TunePlan when one exists (never
+    # measures); "full" searches the launch-parameter space on a cache miss
+    # and persists the winner per (dataset, executor, backend, devices).
+    tune: str = "off"
+    # Storage dtype of the static operands (dictionary + Phi values):
+    # "fp32", "bf16" (bf16 storage / fp32 accumulate — halves resident
+    # bytes, accuracy contract repro.tune.plan.BF16_RTOL), or "auto" (a
+    # searched axis; requires tune != "off").
+    compute_dtype: str = "fp32"
+    # cap on measured candidates per search (the default-config candidate
+    # is never truncated away, so "tuned" can't regress the frozen config
+    # on the tuner's own objective)
+    tune_budget: int = 12
     # format="auto" SELL thresholds: padding overhead (extra slots/coeff)
     # below sell_accept takes SELL outright, above sell_reject strikes it
     sell_accept: float = 1.0
@@ -86,6 +100,8 @@ class LifeEngine:
                  cache: Optional[PlanCache] = None):
         if config.executor not in REGISTRY:
             raise ValueError(f"executor must be one of {REGISTRY.names()}")
+        from repro.tune.tuner import validate_config as _validate_tune
+        _validate_tune(config)
         self.problem = problem
         self.config = config
         self.cache = cache if cache is not None else PlanCache(
@@ -125,6 +141,23 @@ class LifeEngine:
     def format_plan(self):
         """Chosen FormatPlan (format != "coo" only)."""
         return self.executor.plans.get("format")
+
+    @property
+    def tune_plan(self):
+        """Resolved TunePlan (tune != "off" only; DESIGN.md §10)."""
+        return self.executor.plans.get("tune")
+
+    @property
+    def resolved_compute_dtype(self) -> str:
+        """The storage dtype this engine actually runs under — the tune
+        plan's winner when a search resolved ``compute_dtype="auto"``,
+        the config value otherwise.  Serving pins checkpoints (and bucket
+        rebuilds) to this, never to the unresolved request."""
+        plan = self.tune_plan
+        if plan is not None:
+            return plan.compute_dtype
+        cd = getattr(self.config, "compute_dtype", "fp32")
+        return "fp32" if cd == "auto" else cd
 
     @property
     def wc_plan(self):

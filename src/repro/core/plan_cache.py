@@ -103,6 +103,36 @@ def format_plan_key(atoms: np.ndarray, voxels: np.ndarray, fibers: np.ndarray,
     return h.hexdigest()
 
 
+def tune_plan_key(atoms: np.ndarray, voxels: np.ndarray, fibers: np.ndarray,
+                  *, sizes, n_theta: int, executor: str, fmt: str,
+                  backend: str, n_devices: int, compute_dtype: str,
+                  budget: int = 0, mesh=(1, 1)) -> str:
+    """Digest for a TunePlan: full index content + problem geometry + the
+    executor/format pair the search bound + the *platform* (backend name,
+    device count, and the ``(R, C)`` mesh shape) + the requested
+    compute-dtype mode and search budget.
+
+    Scoping by platform is the point of the whole subsystem (the paper's
+    Table 9: the best launch configuration shifts with the hardware): a plan
+    tuned on one backend must miss cleanly on another instead of replaying
+    tiles measured for different silicon.  The mesh shape matters for the
+    same reason — a ``shard-sell`` plan measured on a (4, 2) partition saw
+    different per-cell geometry than a (2, 4) one on the same device count.
+    The requested dtype is in the key — not the resolved winner — so
+    ``compute_dtype="auto"`` and an explicit "fp32" request never share an
+    entry even when "auto" resolves to fp32.
+    """
+    h = hashlib.sha256()
+    h.update(b"tune-plan-v%d:" % _FORMAT_VERSION)
+    h.update(("%s|%s|%s|%s" % (executor, fmt, backend, compute_dtype))
+             .encode())
+    h.update(np.int64(list(sizes) + [n_theta, n_devices, budget]
+                      + list(mesh)).tobytes())
+    for arr in (atoms, voxels, fibers):
+        h.update(np.ascontiguousarray(arr, np.int64).tobytes())
+    return h.hexdigest()
+
+
 def shard_plan_key(atoms: np.ndarray, voxels: np.ndarray, fibers: np.ndarray,
                    *, sizes, R: int, C: int, cell_format: str,
                    n_devices: int) -> str:
@@ -283,6 +313,40 @@ class PlanCache:
             geometry=np.int64([plan.R, plan.C]),
             voxel_cuts=np.asarray(plan.voxel_cuts, np.int64),
             fiber_cuts=np.asarray(plan.fiber_cuts, np.int64)))
+
+    # -- TunePlan -------------------------------------------------------------
+    def get_tune_plan(self, key: str):
+        from repro.tune.plan import TunePlan
+        raw = self._read(key)
+        self.stats.record(raw is not None)
+        if raw is None:
+            return None
+        try:
+            params = {str(k): int(v) for k, v in
+                      zip(raw["params_keys"], raw["params_vals"])}
+            meas = {str(k): float(v) for k, v in
+                    zip(raw["meas_keys"], raw["meas_vals"])}
+            return TunePlan(
+                executor=str(raw["executor"]), backend=str(raw["backend"]),
+                n_devices=int(raw["n_devices"]), params=params,
+                compute_dtype=str(raw["compute_dtype"]),
+                reason=str(raw["reason"]), measurements=meas)
+        except (KeyError, ValueError):
+            return None
+
+    def put_tune_plan(self, key: str, plan) -> None:
+        pk = sorted(plan.params)
+        mk = sorted(plan.measurements)
+        self._write(key, dict(
+            executor=np.str_(plan.executor), backend=np.str_(plan.backend),
+            n_devices=np.int64(plan.n_devices),
+            compute_dtype=np.str_(plan.compute_dtype),
+            reason=np.str_(plan.reason),
+            params_keys=np.asarray(pk, np.str_),
+            params_vals=np.asarray([plan.params[k] for k in pk], np.int64),
+            meas_keys=np.asarray(mk, np.str_),
+            meas_vals=np.asarray([plan.measurements[k] for k in mk],
+                                 np.float64)))
 
     # -- FormatPlan -----------------------------------------------------------
     def get_format_plan(self, key: str) -> Optional[FormatPlan]:

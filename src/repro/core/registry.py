@@ -131,15 +131,33 @@ class ExecutorRegistry:
         return name in self._factories
 
     def create(self, name: str, phi: PhiTensor, problem, config,
-               cache: Optional[PlanCache] = None) -> Executor:
+               cache: Optional[PlanCache] = None,
+               tune_plan=None) -> Executor:
         """Instantiate executor ``name`` for ``phi`` (which may be a
-        compacted descendant of ``problem.phi``)."""
+        compacted descendant of ``problem.phi``).
+
+        Tuning hook (DESIGN.md §10): with ``config.tune != "off"`` (and no
+        explicit ``tune_plan``) the kernel autotuner resolves a
+        :class:`~repro.tune.plan.TunePlan` for this (dataset, executor,
+        backend) through the plan cache; the plan's launch parameters are
+        substituted into the config the factory sees, and the plan itself
+        lands in ``executor.plans["tune"]`` so engines can report what ran.
+        An explicit ``tune_plan`` is applied verbatim (no search).
+        """
         if name not in self._factories:
             raise ValueError(
                 f"executor must be one of {self.names()}, got {name!r}")
         if cache is None:
             cache = PlanCache("")        # disabled cache
-        return self._factories[name](phi, problem, config, cache)
+        if tune_plan is None and getattr(config, "tune", "off") != "off":
+            from repro.tune.tuner import resolve_plan
+            tune_plan = resolve_plan(name, phi, problem, config, cache)
+        if tune_plan is not None:
+            config = tune_plan.apply(config)
+        executor = self._factories[name](phi, problem, config, cache)
+        if tune_plan is not None:
+            executor.plans["tune"] = tune_plan
+        return executor
 
 
 REGISTRY = ExecutorRegistry()
@@ -149,9 +167,29 @@ REGISTRY = ExecutorRegistry()
 # Built-in factories
 # ----------------------------------------------------------------------------
 
+def _compute_dtype(config) -> str:
+    """Resolved storage dtype a factory should build under ("auto" only
+    reaches a factory when the tuner was bypassed — treat it as fp32)."""
+    cd = getattr(config, "compute_dtype", "fp32")
+    return "fp32" if cd == "auto" else cd
+
+
+def _with_storage_dtype(phi: PhiTensor, dictionary, config):
+    """bf16 storage of the static operands for the jnp executors.
+
+    Dynamic operands (w, Y) stay fp32, so every product promotes to fp32
+    before the segment/scatter reductions — bf16 storage, fp32 accumulate,
+    uniformly with the Pallas paths (kernels/ops.py, DESIGN.md §10.3)."""
+    if _compute_dtype(config) != "bf16":
+        return phi, dictionary
+    return (dataclasses.replace(
+                phi, values=jnp.asarray(phi.values).astype(jnp.bfloat16)),
+            jnp.asarray(dictionary).astype(jnp.bfloat16))
+
+
 @REGISTRY.register("naive")
 def _make_naive(phi, problem, config, cache) -> Executor:
-    d = problem.dictionary
+    phi, d = _with_storage_dtype(phi, problem.dictionary, config)
     return Executor(
         name="naive",
         matvec=lambda w: spmv.dsc_naive(phi, d, w),
@@ -167,7 +205,7 @@ def _sorted_pair(phi: PhiTensor, wc_dim: str):
 
 @REGISTRY.register("opt")
 def _make_opt(phi, problem, config, cache) -> Executor:
-    d = problem.dictionary
+    phi, d = _with_storage_dtype(phi, problem.dictionary, config)
     phi_v, phi_w, _, _ = _sorted_pair(phi, "fiber")
     return Executor(
         name="opt",
@@ -178,7 +216,7 @@ def _make_opt(phi, problem, config, cache) -> Executor:
 
 @REGISTRY.register("opt-paper")
 def _make_opt_paper(phi, problem, config, cache) -> Executor:
-    d = problem.dictionary
+    phi, d = _with_storage_dtype(phi, problem.dictionary, config)
     phi_v, phi_w, _, _ = _sorted_pair(phi, "atom")
     return Executor(
         name="opt-paper",
@@ -209,12 +247,15 @@ def _make_kernel(phi, problem, config, cache) -> Executor:
     wc_plan = planned_tiles(np.asarray(phi_w.fibers), phi.n_fibers,
                             c_tile=config.c_tile, row_tile=config.row_tile,
                             cache=cache)
+    cd = _compute_dtype(config)
     return Executor(
         name="kernel",
         matvec=kops.make_dsc(phi_v, d, dsc_plan,
-                             interpret=config.kernel_interpret),
+                             interpret=config.kernel_interpret,
+                             compute_dtype=cd),
         rmatvec=kops.make_wc(phi_w, d, wc_plan,
-                             interpret=config.kernel_interpret),
+                             interpret=config.kernel_interpret,
+                             compute_dtype=cd),
         plans=dict(dsc_tiles=dsc_plan, wc_tiles=wc_plan))
 
 
@@ -234,12 +275,15 @@ def _make_kernel_sell(phi, problem, config, cache) -> Executor:
                               slot_tile=slot_tile)
     sell_wc = SellPhi.encode(phi, op="wc", row_tile=row_tile,
                              slot_tile=slot_tile)
+    cd = _compute_dtype(config)
     return Executor(
         name="kernel-sell",
         matvec=kops.make_dsc_sell(sell_dsc, d,
-                                  interpret=config.kernel_interpret),
+                                  interpret=config.kernel_interpret,
+                                  compute_dtype=cd),
         rmatvec=kops.make_wc_sell(sell_wc, d,
-                                  interpret=config.kernel_interpret),
+                                  interpret=config.kernel_interpret,
+                                  compute_dtype=cd),
         plans=dict(sell_dsc=sell_dsc, sell_wc=sell_wc))
 
 
@@ -251,9 +295,9 @@ def _make_alto(phi, problem, config, cache) -> Executor:
     coefficient order feeds DSC and WC — halving resident index memory
     versus the two per-op sorted copies the other executors keep."""
     from repro.formats.alto import AltoPhi
-    d = problem.dictionary
     enc, _ = AltoPhi.encode(phi).sort()
-    phi_lin = enc.decode()
+    phi_lin, d = _with_storage_dtype(enc.decode(), problem.dictionary,
+                                     config)
     # keep accounting only — retaining `enc` would hold a second
     # (lin, values) copy alive for the executor's lifetime
     meta = dict(n_coeffs=enc.n_coeffs, nbytes=enc.nbytes)
@@ -306,7 +350,8 @@ _WC_FNS = {"atom": spmv.wc_atom_sorted, "voxel": spmv.wc_atom_sorted,
 
 @REGISTRY.register("auto")
 def _make_auto(phi, problem, config, cache) -> Executor:
-    d = problem.dictionary
+    phi, d = _with_storage_dtype(phi, problem.dictionary, config)
+    probe_dtype = problem.dictionary.dtype     # probes mimic solver operands
     atoms = np.asarray(phi.atoms)
     voxels = np.asarray(phi.voxels)
     fibers = np.asarray(phi.fibers)
@@ -321,8 +366,8 @@ def _make_auto(phi, problem, config, cache) -> Executor:
             _, plan.order = sort_by_host(phi, plan.restructure)
         return plan
 
-    w_probe = jnp.ones((phi.n_fibers,), d.dtype)
-    y_probe = jnp.ones((phi.n_voxels, d.shape[1]), d.dtype)
+    w_probe = jnp.ones((phi.n_fibers,), probe_dtype)
+    y_probe = jnp.ones((phi.n_voxels, d.shape[1]), probe_dtype)
     dsc_plan = tuned("dsc", lambda p, dim: _DSC_FNS[dim](p, d, w_probe))
     wc_plan = tuned("wc", lambda p, dim: _WC_FNS[dim](p, d, y_probe))
 
@@ -378,6 +423,7 @@ def _make_shard_executor(phi, problem, config, cache,
     mesh = compat.make_mesh((R, C), ("data", "model"))
     d = problem.dictionary
     n_theta = d.shape[1]
+    cd = _compute_dtype(config)
     plan = partition_cuts(phi, R, C, cell_format=cell_format, cache=cache)
     row_tile = getattr(config, "row_tile", 8)
     slot_tile = getattr(config, "slot_tile", 32)
@@ -393,12 +439,15 @@ def _make_shard_executor(phi, problem, config, cache,
     nv_pad = R * plan.nv_local
 
     if cell_format == "coo":
+        from repro.kernels.ops import storage_cast
         dsc_sm, wc_sm = LS.make_sharded_ops(mesh, meta)
-        cell = tuple(jnp.asarray(sp_dsc.arrays[k])
+        cell = tuple(storage_cast(sp_dsc.arrays[k], cd) if k == "values"
+                     else jnp.asarray(sp_dsc.arrays[k])
                      for k in ("atoms", "voxels", "fibers", "values"))
-        wcell = tuple(jnp.asarray(sp_wc.arrays[k])
+        wcell = tuple(storage_cast(sp_wc.arrays[k], cd) if k == "values"
+                      else jnp.asarray(sp_wc.arrays[k])
                       for k in ("atoms", "voxels", "fibers", "values"))
-        d_op = d
+        d_op = storage_cast(d, cd)
 
         def run_dsc(w_padded):
             return dsc_sm(*cell, d_op, w_padded)
@@ -406,17 +455,18 @@ def _make_shard_executor(phi, problem, config, cache,
         def run_wc(y_padded):
             return wc_sm(*wcell, d_op, y_padded)
     else:
-        from repro.kernels.ops import pad_lanes
+        from repro.kernels.ops import pad_lanes, storage_cast
         dsc_sm, wc_sm = LS.make_sharded_sell_ops(
             mesh, meta, row_tile=row_tile, slot_tile=slot_tile,
+            out_dtype=d.dtype,
             interpret=getattr(config, "kernel_interpret", True))
         cell = (jnp.asarray(sp_dsc.arrays["atoms"]),
                 jnp.asarray(sp_dsc.arrays["others"]),
-                jnp.asarray(sp_dsc.arrays["values"]))
+                storage_cast(sp_dsc.arrays["values"], cd))
         wcell = (jnp.asarray(sp_wc.arrays["atoms"]),
                  jnp.asarray(sp_wc.arrays["others"]),
-                 jnp.asarray(sp_wc.arrays["values"]))
-        d_op = pad_lanes(d)
+                 storage_cast(sp_wc.arrays["values"], cd))
+        d_op = pad_lanes(storage_cast(d, cd))
 
         def run_dsc(w_padded):
             return dsc_sm(*cell, d_op, w_padded)[:, :n_theta]

@@ -20,7 +20,6 @@ iteration; `compact_by_weight` drops coefficients whose fiber weight is zero
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -115,28 +114,33 @@ def autotune_plan(
     """Measure each restructuring candidate `repeats` times, pick the best.
 
     Mirrors the paper's runtime selection ("average execution time for three
-    runs").  ``run(prepared, candidate)`` executes the op for the candidate's
-    prepared data and blocks until ready.  ``sorter(phi, candidate)`` builds
-    that prepared data plus an optional permutation; the default sorts along
-    an indirection dimension, and formats/select.py substitutes format
-    encoders so the same measurement loop arbitrates between layouts.
+    runs") — timed through the one shared measurement loop in
+    :mod:`repro.tune.search`, the same loop the kernel autotuner uses, so
+    restructuring choice, format choice, and tile choice are measured with
+    identical semantics.  ``run(prepared, candidate)`` executes the op for
+    the candidate's prepared data and blocks until ready.  ``sorter(phi,
+    candidate)`` builds that prepared data plus an optional permutation; the
+    default sorts along an indirection dimension, and formats/select.py
+    substitutes format encoders so the same measurement loop arbitrates
+    between layouts.
     """
+    from repro.tune import search as tsearch
     full_key = None
     if cache_key is not None:
         full_key = ("plan", op, phi.n_coeffs) + cache_key
         if full_key in _PLAN_CACHE:
             return _PLAN_CACHE[full_key]
-    best: Tuple[float, str, Optional[np.ndarray]] | None = None
-    for dim in candidates:
+    prepared_orders = {}
+
+    def measure(dim: str) -> float:
         prepared, order = sorter(phi, dim)
-        run(prepared, dim).block_until_ready()  # compile/warmup
-        t0 = time.perf_counter()
-        for _ in range(repeats):
-            run(prepared, dim).block_until_ready()
-        dt = (time.perf_counter() - t0) / repeats
-        if best is None or dt < best[0]:
-            best = (dt, dim, order)
-    assert best is not None
+        prepared_orders[dim] = order
+        return tsearch.time_call(lambda: run(prepared, dim),
+                                 warmup=1, repeats=repeats)
+
+    best_i, _ = tsearch.measure_candidates(tuple(candidates), measure)
+    best_dim = tuple(candidates)[best_i]
+    best = (None, best_dim, prepared_orders[best_dim])
     # Output-side sorts admit segment (sync-free) partitioning; input-side
     # sorts fall back to coefficient partitioning (paper Table 3/4 combos).
     out_dim = "voxel" if op == "dsc" else "fiber"

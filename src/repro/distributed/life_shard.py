@@ -243,7 +243,7 @@ def make_sharded_ops(mesh: Mesh, shards_meta: Dict[str, int]):
 
 
 def make_sharded_sell_ops(mesh: Mesh, shards_meta: Dict[str, int], *,
-                          row_tile: int, slot_tile: int,
+                          row_tile: int, slot_tile: int, out_dtype=None,
                           interpret: bool = True):
     """shard_map'd SpMVs over per-cell SELL tiles (the `shard-sell` path).
 
@@ -276,7 +276,7 @@ def make_sharded_sell_ops(mesh: Mesh, shards_meta: Dict[str, int], *,
         scaled = jnp.take(w_loc.reshape(-1), f) * vals   # padding slots stay 0
         y = dsc_kernel.dsc_sell_pallas(
             a, scaled, d, row_tile=row_tile, slot_tile=slot_tile,
-            interpret=interpret)
+            out_dtype=out_dtype, interpret=interpret)
         return jax.lax.psum(y[:nv_l], "model")
 
     def wc_op(a, v, vals, d, y_loc):
@@ -286,7 +286,7 @@ def make_sharded_sell_ops(mesh: Mesh, shards_meta: Dict[str, int], *,
         yg = jnp.take(y2, v, axis=0)
         w = wc_kernel.wc_sell_pallas(
             a, yg, vals, d, row_tile=row_tile, slot_tile=slot_tile,
-            interpret=interpret)
+            out_dtype=out_dtype, interpret=interpret)
         return jax.lax.psum(w.reshape(-1)[:nf_l], rows)
 
     dsc_fn = compat.shard_map(

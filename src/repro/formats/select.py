@@ -21,7 +21,10 @@ Phi.  The decision pipeline:
    as the paper's runtime restructuring selection, literally reused from
    ``restructure.autotune_plan`` with the format encoders plugged in as
    the ``sorter`` and the DSC executors (the dominant op, ~2
-   calls/iteration vs WC's ~1.5) as the ``run``.
+   calls/iteration vs WC's ~1.5) as the ``run``.  ``autotune_plan`` in
+   turn times through :mod:`repro.tune.search` — the same measurement
+   loop the kernel autotuner uses — so format choice and tile choice
+   share one cost currency (DESIGN.md §10.2).
 
 ``resolve_format`` is the engine entry point: it also handles explicit
 ``LifeConfig(format="sell"/"alto"/"coo")`` requests (no selection, plan

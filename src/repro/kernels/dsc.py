@@ -36,8 +36,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Frozen fallbacks only: production paths bind launch parameters through the
+# factories below (fed by a repro.tune TunePlan); these constants are what
+# tune="off" and the pre-tune call sites get.
 DEFAULT_C_TILE = 256
 DEFAULT_ROW_TILE = 8
+
+
+def dsc_factory(*, row_tile: int = DEFAULT_ROW_TILE, out_dtype=None,
+                interpret: bool = False):
+    """Bind COO-DSC launch parameters once (e.g. from a TunePlan).
+
+    Returns a callable with the :func:`dsc_pallas` signature minus the bound
+    keywords — the parameterized replacement for reading module constants."""
+    return functools.partial(dsc_pallas, row_tile=row_tile,
+                             out_dtype=out_dtype, interpret=interpret)
+
+
+def dsc_sell_factory(*, row_tile: int = DEFAULT_ROW_TILE,
+                     slot_tile: int = 32, out_dtype=None,
+                     interpret: bool = False):
+    """Bind SELL-DSC launch parameters once (e.g. from a TunePlan)."""
+    return functools.partial(dsc_sell_pallas, row_tile=row_tile,
+                             slot_tile=slot_tile, out_dtype=out_dtype,
+                             interpret=interpret)
 
 
 def _dsc_kernel(row_block_ref,            # scalar prefetch: (T,) int32
@@ -71,14 +93,18 @@ def _dsc_kernel(row_block_ref,            # scalar prefetch: (T,) int32
 
 def dsc_pallas(row_block: jax.Array, atoms_p: jax.Array, scaled_p: jax.Array,
                local_row_p: jax.Array, dictionary_padded: jax.Array,
-               *, row_tile: int, n_row_blocks: int,
+               *, row_tile: int, n_row_blocks: int, out_dtype=None,
                interpret: bool = False) -> jax.Array:
     """Run the DSC executor.  Returns (n_row_blocks*row_tile, Ntheta_padded).
 
     All operands are pre-padded by :mod:`repro.kernels.ops` from a TilePlan.
+    ``out_dtype`` pins the accumulator/output dtype independently of the
+    storage dtype of ``dictionary_padded`` (bf16 storage keeps fp32
+    accumulation: pass out_dtype=float32).
     """
     n_tiles, c_tile = atoms_p.shape
     n_theta_p = dictionary_padded.shape[1]
+    out_dtype = dictionary_padded.dtype if out_dtype is None else out_dtype
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_tiles,),
@@ -94,7 +120,7 @@ def dsc_pallas(row_block: jax.Array, atoms_p: jax.Array, scaled_p: jax.Array,
         _dsc_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(
-            (n_row_blocks * row_tile, n_theta_p), dictionary_padded.dtype),
+            (n_row_blocks * row_tile, n_theta_p), out_dtype),
         interpret=interpret,
     )(row_block, atoms_p, scaled_p, local_row_p, dictionary_padded)
 
@@ -118,12 +144,15 @@ def _dsc_sell_kernel(atoms_ref,           # (ROW_TILE, SLOT_TILE) int32
     contrib = d_rows * scaled_ref[...].reshape(-1)[:, None]  # daxpy slots
     # slot [r, s] belongs to output row r by layout: reduce the slot axis,
     # accumulate directly — the one-hot matmul of _dsc_kernel is gone.
-    y_ref[...] += contrib.reshape(r, s, -1).sum(axis=1).astype(y_ref.dtype)
+    # cast BEFORE the reduction: with bf16-stored operands the slot-axis sum
+    # must still accumulate in the output dtype (fp32).
+    y_ref[...] += contrib.reshape(r, s, -1).astype(y_ref.dtype).sum(axis=1)
 
 
 def dsc_sell_pallas(atoms: jax.Array, scaled: jax.Array,
                     dictionary_padded: jax.Array, *, row_tile: int,
-                    slot_tile: int, interpret: bool = False) -> jax.Array:
+                    slot_tile: int, out_dtype=None,
+                    interpret: bool = False) -> jax.Array:
     """DSC over a SELL layout.  ``atoms``/``scaled`` are the dense
     ``(n_rows_padded, width)`` slot arrays of ``formats/sell.py:SellPhi``
     (``scaled = w[fibers] * values``, padding slots 0).  Returns
@@ -131,6 +160,7 @@ def dsc_sell_pallas(atoms: jax.Array, scaled: jax.Array,
     index, axis 1 sweeps slot chunks into the resident block."""
     n_rows_padded, width = atoms.shape
     n_theta_p = dictionary_padded.shape[1]
+    out_dtype = dictionary_padded.dtype if out_dtype is None else out_dtype
     grid = (n_rows_padded // row_tile, width // slot_tile)
     return pl.pallas_call(
         _dsc_sell_kernel,
@@ -141,7 +171,6 @@ def dsc_sell_pallas(atoms: jax.Array, scaled: jax.Array,
             pl.BlockSpec(dictionary_padded.shape, lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((row_tile, n_theta_p), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(
-            (n_rows_padded, n_theta_p), dictionary_padded.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_rows_padded, n_theta_p), out_dtype),
         interpret=interpret,
     )(atoms, scaled, dictionary_padded)

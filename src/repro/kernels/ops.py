@@ -6,6 +6,15 @@ return matvec/rmatvec callables whose only dynamic inputs are ``w`` / ``Y``.
 
 Lane padding: Ntheta is padded to a 128-lane multiple (the paper pads Ntheta
 to warp multiples; zero columns contribute zeros through both ops).
+
+Compute dtype (DESIGN.md §10.3): ``compute_dtype="bf16"`` stores the static
+operands — the dictionary and the Phi values — in bfloat16 while every
+reduction accumulates in fp32 (the kernels' output dtype is pinned to the
+original dictionary dtype, and contributions are cast up before the
+reductions).  Dynamic operands (``w``, ``Y``) stay fp32, so products promote
+to fp32 before any accumulation; only per-element storage rounding (~2^-8
+relative) enters the result — the documented ``repro.tune.plan.BF16_RTOL``
+contract.
 """
 from __future__ import annotations
 
@@ -29,6 +38,14 @@ def pad_lanes(x: jax.Array, multiple: int = LANES) -> jax.Array:
     if pad == 0:
         return x
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def storage_cast(x: jax.Array, compute_dtype: str) -> jax.Array:
+    """Cast a *static* operand to its storage dtype ("bf16" halves resident
+    bytes; anything else is identity).  Never used on accumulators."""
+    if compute_dtype == "bf16":
+        return jnp.asarray(x).astype(jnp.bfloat16)
+    return jnp.asarray(x)
 
 
 def _padded_operands(phi: PhiTensor, plan: TilePlan):
@@ -60,31 +77,34 @@ def _visited_mask(plan: TilePlan, n_rows: int) -> jax.Array:
 
 
 def make_dsc(phi_voxel_sorted: PhiTensor, dictionary: jax.Array,
-             plan: TilePlan, *, interpret: bool = True) -> Callable:
+             plan: TilePlan, *, interpret: bool = True,
+             compute_dtype: str = "fp32") -> Callable:
     """Returns matvec(w) -> (Nv, Ntheta) running the DSC Pallas executor."""
     ops = _padded_operands(phi_voxel_sorted, plan)
-    d_pad = pad_lanes(dictionary)
+    ops["values_p"] = storage_cast(ops["values_p"], compute_dtype)
+    d_pad = pad_lanes(storage_cast(dictionary, compute_dtype))
     n_theta = dictionary.shape[1]
     n_voxels = phi_voxel_sorted.n_voxels
     n_row_blocks = plan.n_rows_padded // plan.row_tile
     mask = _visited_mask(plan, n_voxels)
+    kernel = dsc_kernel.dsc_factory(row_tile=plan.row_tile,
+                                    out_dtype=dictionary.dtype,
+                                    interpret=interpret)
 
     @jax.jit
     def matvec(w: jax.Array) -> jax.Array:
         scaled_p = jnp.take(w, ops["fibers_p"].reshape(-1)).reshape(
             ops["fibers_p"].shape) * ops["values_p"]
-        y = dsc_kernel.dsc_pallas(
-            ops["row_block"], ops["atoms_p"], scaled_p, ops["local_row_p"],
-            d_pad, row_tile=plan.row_tile, n_row_blocks=n_row_blocks,
-            interpret=interpret)
+        y = kernel(ops["row_block"], ops["atoms_p"], scaled_p,
+                   ops["local_row_p"], d_pad, n_row_blocks=n_row_blocks)
         # where (not multiply): unvisited blocks are uninitialized memory
         return jnp.where(mask[:, None] > 0, y[:n_voxels, :n_theta], 0.0)
 
     return matvec
 
 
-def make_dsc_sell(sell, dictionary: jax.Array, *,
-                  interpret: bool = True) -> Callable:
+def make_dsc_sell(sell, dictionary: jax.Array, *, interpret: bool = True,
+                  compute_dtype: str = "fp32") -> Callable:
     """matvec(w) -> (Nv, Ntheta) over a ``formats/sell.py:SellPhi`` (op="dsc").
 
     No TilePlan, no prefetch operands: the layout's static slot arrays are
@@ -93,32 +113,36 @@ def make_dsc_sell(sell, dictionary: jax.Array, *,
         raise ValueError(f"need a dsc-layout SellPhi, got op={sell.op!r}")
     atoms = jnp.asarray(sell.atoms)
     fibers = jnp.asarray(sell.others)
-    values = jnp.asarray(sell.values)
-    d_pad = pad_lanes(dictionary)
+    values = storage_cast(sell.values, compute_dtype)
+    d_pad = pad_lanes(storage_cast(dictionary, compute_dtype))
     n_theta = dictionary.shape[1]
     n_voxels = sell.n_voxels
+    kernel = dsc_kernel.dsc_sell_factory(
+        row_tile=sell.row_tile, slot_tile=sell.slot_tile,
+        out_dtype=dictionary.dtype, interpret=interpret)
 
     @jax.jit
     def matvec(w: jax.Array) -> jax.Array:
         scaled = jnp.take(w, fibers) * values      # padding slots stay 0
-        y = dsc_kernel.dsc_sell_pallas(
-            atoms, scaled, d_pad, row_tile=sell.row_tile,
-            slot_tile=sell.slot_tile, interpret=interpret)
+        y = kernel(atoms, scaled, d_pad)
         return y[:n_voxels, :n_theta]
 
     return matvec
 
 
-def make_wc_sell(sell, dictionary: jax.Array, *,
-                 interpret: bool = True) -> Callable:
+def make_wc_sell(sell, dictionary: jax.Array, *, interpret: bool = True,
+                 compute_dtype: str = "fp32") -> Callable:
     """rmatvec(Y) -> (Nf,) over a ``formats/sell.py:SellPhi`` (op="wc")."""
     if sell.op != "wc":
         raise ValueError(f"need a wc-layout SellPhi, got op={sell.op!r}")
     atoms = jnp.asarray(sell.atoms)
     voxels = jnp.asarray(sell.others)
-    values = jnp.asarray(sell.values)
-    d_pad = pad_lanes(dictionary)
+    values = storage_cast(sell.values, compute_dtype)
+    d_pad = pad_lanes(storage_cast(dictionary, compute_dtype))
     n_fibers = sell.n_fibers
+    kernel = wc_kernel.wc_sell_factory(
+        row_tile=sell.row_tile, slot_tile=sell.slot_tile,
+        out_dtype=dictionary.dtype, interpret=interpret)
 
     @jax.jit
     def rmatvec(y: jax.Array) -> jax.Array:
@@ -126,22 +150,25 @@ def make_wc_sell(sell, dictionary: jax.Array, *,
         # coalesced XLA pre-gather of Y rows, one (rows_padded, W, T) stream;
         # padding slots gather row 0 but carry value 0, so they are inert
         yg = jnp.take(y_pad, voxels, axis=0)
-        w = wc_kernel.wc_sell_pallas(
-            atoms, yg, values, d_pad, row_tile=sell.row_tile,
-            slot_tile=sell.slot_tile, interpret=interpret)
+        w = kernel(atoms, yg, values, d_pad)
         return w.reshape(-1)[:n_fibers]
 
     return rmatvec
 
 
 def make_wc(phi_fiber_sorted: PhiTensor, dictionary: jax.Array,
-            plan: TilePlan, *, interpret: bool = True) -> Callable:
+            plan: TilePlan, *, interpret: bool = True,
+            compute_dtype: str = "fp32") -> Callable:
     """Returns rmatvec(Y) -> (Nf,) running the WC Pallas executor."""
     ops = _padded_operands(phi_fiber_sorted, plan)
-    d_pad = pad_lanes(dictionary)
+    ops["values_p"] = storage_cast(ops["values_p"], compute_dtype)
+    d_pad = pad_lanes(storage_cast(dictionary, compute_dtype))
     n_fibers = phi_fiber_sorted.n_fibers
     n_fib_blocks = plan.n_rows_padded // plan.row_tile
     mask = _visited_mask(plan, n_fibers)
+    kernel = wc_kernel.wc_factory(fib_tile=plan.row_tile,
+                                  out_dtype=dictionary.dtype,
+                                  interpret=interpret)
 
     @jax.jit
     def rmatvec(y: jax.Array) -> jax.Array:
@@ -152,10 +179,8 @@ def make_wc(phi_fiber_sorted: PhiTensor, dictionary: jax.Array,
             jnp.concatenate([y_pad, jnp.zeros((1, y_pad.shape[1]), y_pad.dtype)]),
             ops["voxels_p"].reshape(-1), axis=0,
         ).reshape(*ops["voxels_p"].shape, y_pad.shape[1])
-        w = wc_kernel.wc_pallas(
-            ops["row_block"], ops["atoms_p"], yg_p, ops["values_p"],
-            ops["local_row_p"], d_pad, fib_tile=plan.row_tile,
-            n_fib_blocks=n_fib_blocks, interpret=interpret)
+        w = kernel(ops["row_block"], ops["atoms_p"], yg_p, ops["values_p"],
+                   ops["local_row_p"], d_pad, n_fib_blocks=n_fib_blocks)
         return jnp.where(mask > 0, w.reshape(-1)[:n_fibers], 0.0)
 
     return rmatvec

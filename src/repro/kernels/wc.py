@@ -17,13 +17,32 @@ Per grid step:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Frozen fallbacks only — see kernels/dsc.py; production binds launch
+# parameters through the factories below.
 DEFAULT_C_TILE = 256
 DEFAULT_FIB_TILE = 128
+
+
+def wc_factory(*, fib_tile: int = DEFAULT_FIB_TILE, out_dtype=None,
+               interpret: bool = False):
+    """Bind COO-WC launch parameters once (e.g. from a TunePlan)."""
+    return functools.partial(wc_pallas, fib_tile=fib_tile,
+                             out_dtype=out_dtype, interpret=interpret)
+
+
+def wc_sell_factory(*, row_tile: int = 8, slot_tile: int = 32, out_dtype=None,
+                    interpret: bool = False):
+    """Bind SELL-WC launch parameters once (e.g. from a TunePlan)."""
+    return functools.partial(wc_sell_pallas, row_tile=row_tile,
+                             slot_tile=slot_tile, out_dtype=out_dtype,
+                             interpret=interpret)
 
 
 def _wc_kernel(row_block_ref,             # scalar prefetch: (T,) int32
@@ -58,10 +77,15 @@ def _wc_kernel(row_block_ref,             # scalar prefetch: (T,) int32
 def wc_pallas(row_block: jax.Array, atoms_p: jax.Array, yg_p: jax.Array,
               vals_p: jax.Array, local_row_p: jax.Array,
               dictionary_padded: jax.Array, *, fib_tile: int,
-              n_fib_blocks: int, interpret: bool = False) -> jax.Array:
-    """Run the WC executor.  Returns (n_fib_blocks, fib_tile) partial weights."""
+              n_fib_blocks: int, out_dtype=None,
+              interpret: bool = False) -> jax.Array:
+    """Run the WC executor.  Returns (n_fib_blocks, fib_tile) partial weights.
+
+    ``out_dtype`` pins the accumulator/output dtype independently of the
+    storage dtype (bf16 storage keeps fp32 accumulation)."""
     n_tiles, c_tile = atoms_p.shape
     n_theta_p = dictionary_padded.shape[1]
+    out_dtype = dictionary_padded.dtype if out_dtype is None else out_dtype
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_tiles,),
@@ -77,8 +101,7 @@ def wc_pallas(row_block: jax.Array, atoms_p: jax.Array, yg_p: jax.Array,
     return pl.pallas_call(
         _wc_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(
-            (n_fib_blocks, fib_tile), dictionary_padded.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_fib_blocks, fib_tile), out_dtype),
         interpret=interpret,
     )(row_block, atoms_p, yg_p, vals_p, local_row_p, dictionary_padded)
 
@@ -101,20 +124,26 @@ def _wc_sell_kernel(atoms_ref,            # (ROW_TILE, SLOT_TILE) int32
 
     r, s = atoms_ref.shape
     d_rows = d_ref[atoms_ref[...].reshape(-1)]              # (R*S, Ntheta_p)
-    dots = jnp.sum(d_rows.reshape(r, s, -1) * yg_ref[...], axis=-1)
+    # cast to the accumulator dtype BEFORE the reductions: bf16-stored
+    # operands must still dot/accumulate in the output dtype (fp32)
+    prods = (d_rows.reshape(r, s, -1) * yg_ref[...]).astype(w_ref.dtype)
+    dots = jnp.sum(prods, axis=-1)
     # slot [r, s] belongs to fiber row r by layout: reduce the slot axis.
-    w_ref[...] += (dots * vals_ref[...]).sum(axis=1)[None, :].astype(w_ref.dtype)
+    w_ref[...] += (dots * vals_ref[...].astype(w_ref.dtype)
+                   ).sum(axis=1)[None, :]
 
 
 def wc_sell_pallas(atoms: jax.Array, yg: jax.Array, vals: jax.Array,
                    dictionary_padded: jax.Array, *, row_tile: int,
-                   slot_tile: int, interpret: bool = False) -> jax.Array:
+                   slot_tile: int, out_dtype=None,
+                   interpret: bool = False) -> jax.Array:
     """WC over a fiber-row SELL layout.  ``yg`` is the pre-gathered
     ``(n_rows_padded, width, Ntheta_p)`` stream of Y rows (padding slots
     carry value 0 so their gathered rows are inert).  Returns
     ``(n_row_blocks, row_tile)`` partial weights (reshape + trim to Nf)."""
     n_rows_padded, width = atoms.shape
     n_theta_p = dictionary_padded.shape[1]
+    out_dtype = dictionary_padded.dtype if out_dtype is None else out_dtype
     grid = (n_rows_padded // row_tile, width // slot_tile)
     return pl.pallas_call(
         _wc_sell_kernel,
@@ -128,6 +157,6 @@ def wc_sell_pallas(atoms: jax.Array, yg: jax.Array, vals: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, row_tile), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(
-            (n_rows_padded // row_tile, row_tile), dictionary_padded.dtype),
+            (n_rows_padded // row_tile, row_tile), out_dtype),
         interpret=interpret,
     )(atoms, yg, vals, dictionary_padded)

@@ -14,7 +14,13 @@ Bucketing policy
 ----------------
 A job lands in the bucket keyed by its *batch-compatibility class*:
 
-  (Nv, Nf, Ntheta, dictionary digest, format)
+  (Nv, Nf, Ntheta, dictionary digest, format, tune mode, compute dtype)
+
+Tuning settings are part of the class (DESIGN.md §10.4): jobs tuned
+differently must not share a micro-batch — a bf16-storage job stacked with
+an fp32 job would silently run one of them under the other's numerics, and
+a tune="full" job batched with tune="off" would either skip a requested
+search or impose an unrequested one.
 
 Jobs in one bucket can be stacked into a single
 :class:`~repro.core.batched.BatchedLifeEngine` (same geometry, same shared
@@ -131,6 +137,11 @@ class Job:
     # (R, C) device-mesh slice request; None = single-device engines.
     # Mesh jobs run the sharded executor for their format in a solo bucket.
     mesh: Optional[Tuple[int, int]] = None
+    # kernel-autotuning knobs (None = inherit the scheduler config at
+    # submit); both are part of the batch-compatibility class — jobs tuned
+    # differently never share a micro-batch (DESIGN.md §10.4)
+    tune: Optional[str] = None            # "off" | "cached" | "full"
+    compute_dtype: Optional[str] = None   # "fp32" | "bf16" | "auto"
     submitted_at: float = 0.0
     # -- progress (owned by the scheduler) --------------------------------
     state: Optional[SbbnnlsState] = None
@@ -158,10 +169,13 @@ class _Bucket:
     """Jobs sharing one batch-compatibility class + their cached engine."""
 
     def __init__(self, key: Tuple, fmt: str, arrival: int,
-                 mesh: Optional[Tuple[int, int]] = None):
+                 mesh: Optional[Tuple[int, int]] = None,
+                 tune: str = "off", compute_dtype: str = "fp32"):
         self.key = key
         self.format = fmt
         self.mesh = mesh
+        self.tune = tune
+        self.compute_dtype = compute_dtype
         self.solo = _is_solo(fmt, mesh)
         self.jobs: List[Job] = []
         self.iters_served = 0             # virtual time for fairness
@@ -178,7 +192,8 @@ class _Bucket:
 
     # -- engine construction (memoized on the member set) ------------------
     def _config(self, base: LifeConfig) -> LifeConfig:
-        cfg = dataclasses.replace(base, format=self.format)
+        cfg = dataclasses.replace(base, format=self.format, tune=self.tune,
+                                  compute_dtype=self.compute_dtype)
         if self.mesh is not None:
             R, C = self.mesh
             # submit validated the format has a mesh executor
@@ -197,6 +212,17 @@ class _Bucket:
                 self._engine = BatchedLifeEngine(
                     [j.problem for j in self.jobs], cfg, cache)
             self._engine_sig = sig
+        # pin the searched dtype the moment it resolves: engine rebuilds
+        # (member churn) and checkpoint manifests must see the numerics
+        # that actually ran, not the open "auto" request — a re-search
+        # after plan-cache eviction could otherwise flip the dtype
+        # mid-trajectory.  Late arrivals into an already-pinned bucket are
+        # pinned here too (they keyed on "auto" but run the bucket engine).
+        if self.compute_dtype == "auto":
+            self.compute_dtype = self._engine.resolved_compute_dtype
+        for j in self.jobs:
+            if j.compute_dtype == "auto":
+                j.compute_dtype = self.compute_dtype
         return self._engine
 
     # -- the time slice ----------------------------------------------------
@@ -276,6 +302,17 @@ class Scheduler:
             raise ValueError(
                 f"format must be one of "
                 f"{BATCHABLE_FORMATS + _SOLO_FORMATS}, got {job.format!r}")
+        # tuning knobs: inherit the scheduler config when unset, then
+        # validate eagerly (intake is the last place a bad value fails
+        # cheaply).  validate_config reads .tune/.compute_dtype, so the
+        # Job itself is the config it validates — one rule set with the
+        # engines, not a hand-kept copy.
+        if job.tune is None:
+            job.tune = getattr(self.config, "tune", "off")
+        if job.compute_dtype is None:
+            job.compute_dtype = getattr(self.config, "compute_dtype", "fp32")
+        from repro.tune.tuner import validate_config
+        validate_config(job)
         if job.mesh is not None:
             R, C = job.mesh
             if R < 1 or C < 1:
@@ -307,6 +344,7 @@ class Scheduler:
         phi = job.problem.phi
         return (phi.n_voxels, phi.n_fibers, job.problem.dictionary.shape[1],
                 job.dict_digest, job.format, job.mesh,
+                job.tune, job.compute_dtype,
                 job.job_id if _is_solo(job.format, job.mesh) else "")
 
     def _admit(self) -> None:
@@ -318,7 +356,8 @@ class Scheduler:
             if key not in self._buckets:
                 self._buckets[key] = _Bucket(key, job.format,
                                              next(self._arrivals),
-                                             mesh=job.mesh)
+                                             mesh=job.mesh, tune=job.tune,
+                                             compute_dtype=job.compute_dtype)
             self._buckets[key].jobs.append(job)
             job.status = "running"
         self._queue.clear()

@@ -80,7 +80,9 @@ class LifeService:
                n_iters: Optional[int] = None, priority: Optional[int] = None,
                deadline: Optional[float] = None,
                format: Optional[str] = None,
-               mesh: Optional[Tuple[int, int]] = None) -> str:
+               mesh: Optional[Tuple[int, int]] = None,
+               tune: Optional[str] = None,
+               compute_dtype: Optional[str] = None) -> str:
         """Queue one solve; returns its job id.
 
         ``deadline`` is seconds from now (converted to an absolute monotonic
@@ -91,10 +93,12 @@ class LifeService:
         checkpointed values (extend a job with a larger ``n_iters``, bump
         its ``priority``, set a fresh ``deadline``); omitted ones are
         restored from the checkpoint, including the deadline's remaining
-        budget.  The format and the mesh slice are the exceptions: the
-        state's trajectory is only reproducible under the format *and mesh
-        topology* it ran on, so a conflicting explicit ``format`` or
-        ``mesh`` is an error rather than a silent override.
+        budget.  The format, the mesh slice, and the compute dtype are the
+        exceptions: the state's trajectory is only reproducible under the
+        format, mesh topology, *and numerics* it ran on, so a conflicting
+        explicit ``format``, ``mesh``, or ``compute_dtype`` is an error
+        rather than a silent override.  ``tune`` may change freely on
+        resume — tile choice affects speed, not the solution.
 
         ``mesh=(R, C)`` admits the job onto a device-mesh slice: its solve
         runs the sharded executor for its format (DESIGN.md §9)."""
@@ -112,6 +116,7 @@ class LifeService:
                   deadline=None if deadline is None else now + deadline,
                   format=self.config.format if format is None else format,
                   mesh=None if mesh is None else tuple(mesh),
+                  tune=tune, compute_dtype=compute_dtype,
                   submitted_at=now, dataset=dataset_key(problem))
         if job_id in self._resumable:
             arrays, meta = self._resumable[job_id]
@@ -133,12 +138,23 @@ class LifeService:
                 raise ValueError(
                     f"resume of job {job_id!r} rejected: checkpointed state "
                     f"ran on mesh {ck_mesh}, resubmitted with {tuple(mesh)}")
+            ck_dtype = meta.get("compute_dtype")
+            if (compute_dtype is not None and ck_dtype is not None
+                    and compute_dtype != ck_dtype):
+                raise ValueError(
+                    f"resume of job {job_id!r} rejected: checkpointed state "
+                    f"ran under compute_dtype {ck_dtype!r}, resubmitted "
+                    f"with {compute_dtype!r}")
             # validation passed — adopt the state (the entry is consumed
             # only once scheduler.submit accepts the job: its own
             # validation, e.g. the restored mesh not fitting this host's
             # devices, must leave the checkpointed state re-adoptable)
             job.format = ck_format
             job.mesh = ck_mesh
+            if compute_dtype is None and ck_dtype is not None:
+                job.compute_dtype = str(ck_dtype)
+            if tune is None and meta.get("tune") is not None:
+                job.tune = str(meta["tune"])
             job.state = SbbnnlsState(w=jnp.asarray(arrays["w"]),
                                      it=jnp.asarray(arrays["it"]),
                                      loss=jnp.asarray(arrays["loss"]))
@@ -208,6 +224,7 @@ class LifeService:
                 done=job.done, n_iters=job.n_iters, priority=job.priority,
                 format=job.format, dataset=job.dataset,
                 mesh=None if job.mesh is None else list(job.mesh),
+                tune=job.tune, compute_dtype=job.compute_dtype,
                 # deadlines are monotonic-clock absolutes that don't survive
                 # a restart; persist the remaining budget instead
                 deadline_remaining=(None if job.deadline is None

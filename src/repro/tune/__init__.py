@@ -1,0 +1,22 @@
+"""Kernel autotuning subsystem (DESIGN.md §10).
+
+Searches the launch-parameter space of the Pallas executors — tile shapes
+plus the compute-dtype axis — per (dataset, backend, device count), and
+persists each winner as a :class:`~repro.tune.plan.TunePlan` through the
+content-addressed plan cache.  ``LifeConfig(tune="cached"|"full")`` switches
+it on; ``core/registry.ExecutorRegistry.create`` resolves and applies the
+plan beneath every engine.
+"""
+from repro.tune.plan import (BF16_ATOL, BF16_RTOL, COMPUTE_DTYPES,
+                             TUNE_MODES, TunePlan)
+from repro.tune.space import (AXIS_CANDIDATES, TUNABLE_TILES, current_params,
+                              search_space, tile_axes)
+from repro.tune.tuner import (backend_name, resolve_plan, tunable_executors,
+                              validate_config)
+
+__all__ = [
+    "BF16_ATOL", "BF16_RTOL", "COMPUTE_DTYPES", "TUNE_MODES", "TunePlan",
+    "AXIS_CANDIDATES", "TUNABLE_TILES", "current_params", "search_space",
+    "tile_axes", "backend_name", "resolve_plan", "tunable_executors",
+    "validate_config",
+]

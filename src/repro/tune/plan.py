@@ -1,0 +1,78 @@
+"""TunePlan: one executor's measured launch-parameter choice (DESIGN.md §10).
+
+The paper's target-dependent optimizations (its Table 9 platform sweep) are a
+search over launch parameters — tile sizes, partitioning granularity, data
+layout knobs — whose winner depends on both the dataset and the hardware
+(Chen et al. arXiv:1805.11938 for SpMV formats, Laukemann et al.
+arXiv:2403.06348 for linearized tensor layouts).  A :class:`TunePlan` is the
+serialized outcome of that search for one (dataset, executor, backend)
+triple: the winning tile parameters plus the resolved compute dtype, cached
+through :mod:`repro.core.plan_cache` so a warm engine rebuild replays the
+choice instead of re-measuring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+#: documented accuracy contract for ``compute_dtype="bf16"`` (bf16 storage of
+#: the static operands — dictionary + Phi values — with fp32 accumulation):
+#: matvec/rmatvec outputs stay within this relative tolerance of the pure-fp32
+#: executor across the whole executor x format conformance matrix
+#: (regression-tested in tests/test_tune.py).  bf16 keeps an 8-bit mantissa,
+#: so each stored operand carries ~0.4% rounding; the fp32 accumulation keeps
+#: the reduction from amplifying it beyond the per-term bound.
+BF16_RTOL = 2e-2
+BF16_ATOL = 2e-2
+
+#: the compute-dtype axis of the search space ("auto" resolves to one of
+#: these; storage dtype only — accumulation stays fp32 either way)
+COMPUTE_DTYPES = ("fp32", "bf16")
+
+#: LifeConfig.tune modes: "off" = frozen config constants (pre-tune
+#: behaviour), "cached" = replay a persisted plan if one exists but never
+#: measure, "full" = search on miss and persist the winner.
+TUNE_MODES = ("off", "cached", "full")
+
+
+@dataclasses.dataclass
+class TunePlan:
+    """Winning launch parameters for one executor on one dataset/backend.
+
+    ``params`` holds only the tile axes the executor actually exposes
+    (``c_tile``/``row_tile`` for the COO Pallas pair, ``row_tile``/
+    ``slot_tile`` for the SELL kernels and their per-cell shard variants);
+    ``compute_dtype`` is always resolved ("fp32" or "bf16", never "auto").
+    ``reason`` records how the plan came to be: "search" (measured),
+    "default" (nothing to search — no tile axes and a fixed dtype), or
+    "untuned" (tune="cached" miss: config constants, never persisted).
+    ``measurements`` keeps the per-candidate costs (label -> seconds) so
+    benchmarks and audits can explain the choice without re-measuring.
+    """
+
+    executor: str
+    backend: str                   # jax.default_backend() at tune time
+    n_devices: int
+    params: Dict[str, int]
+    compute_dtype: str
+    reason: str = "search"
+    measurements: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def apply(self, config):
+        """Return ``config`` with the tuned launch parameters substituted.
+
+        Only fields the config dataclass actually declares are replaced, so
+        the same plan can parameterize engine configs and the slimmer
+        benchmark configs alike.
+        """
+        fields = {f.name for f in dataclasses.fields(config)}
+        updates = {k: int(v) for k, v in self.params.items() if k in fields}
+        if "compute_dtype" in fields:
+            updates["compute_dtype"] = self.compute_dtype
+        return dataclasses.replace(config, **updates) if updates else config
+
+    def describe(self) -> str:
+        ps = ",".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        return (f"tune[{self.executor}@{self.backend}x{self.n_devices}]: "
+                f"{ps or 'no tile axes'}, {self.compute_dtype} "
+                f"({self.reason})")

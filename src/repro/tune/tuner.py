@@ -1,0 +1,150 @@
+"""Kernel autotuner: search the launch-parameter space, persist the winner.
+
+Entry point is :func:`resolve_plan`, called by
+``core/registry.ExecutorRegistry.create`` whenever the engine config asks
+for tuning (``LifeConfig.tune != "off"``):
+
+  * ``tune="cached"`` — replay a persisted :class:`~repro.tune.plan.TunePlan`
+    if the cache holds one for this (dataset, geometry, executor, backend,
+    device count, requested dtype) key; on a miss, fall back to the config's
+    frozen constants without measuring anything (intake paths must never
+    stall on a search).
+  * ``tune="full"`` — same warm-hit fast path (a rebuild on tuned data pays
+    zero measurements, regression-tested); on a miss, measure every
+    candidate from :func:`repro.tune.space.search_space` through the shared
+    loop in :mod:`repro.tune.search` and persist the winner.
+
+Each candidate is measured as a *bound executor* — the same factory path
+production uses — with the cost weighted ``2 x DSC + 1.5 x WC``: the
+per-iteration op mix of SBBNNLS (two matvecs every iteration, a rmatvec on
+~three of four), matching the weighting ``formats/select`` uses when it
+arbitrates layouts.  Format choice and tile choice thereby share one search
+currency; see DESIGN.md §10.2.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.tune import search
+from repro.tune.plan import COMPUTE_DTYPES, TUNE_MODES, TunePlan
+from repro.tune.space import current_params, search_space, tile_axes
+
+#: SBBNNLS per-iteration op mix: DSC runs every iteration plus the
+#: line-search probe, WC on odd/even alternation — the same dominant-op
+#: weighting formats/select.py measures under.
+DSC_WEIGHT = 2.0
+WC_WEIGHT = 1.5
+
+
+def backend_name() -> str:
+    """The platform tag tune keys are scoped by (cpu / gpu / tpu)."""
+    return jax.default_backend()
+
+
+def _resolved_dtype(config) -> str:
+    dt = getattr(config, "compute_dtype", "fp32")
+    return "fp32" if dt == "auto" else dt
+
+
+def validate_config(config) -> None:
+    """Shared engine-side validation of the tuning knobs."""
+    mode = getattr(config, "tune", "off")
+    if mode not in TUNE_MODES:
+        raise ValueError(f"tune must be one of {TUNE_MODES}, got {mode!r}")
+    dt = getattr(config, "compute_dtype", "fp32")
+    if dt not in COMPUTE_DTYPES + ("auto",):
+        raise ValueError(
+            f"compute_dtype must be one of {COMPUTE_DTYPES + ('auto',)}, "
+            f"got {dt!r}")
+    if dt == "auto" and mode == "off":
+        raise ValueError(
+            'compute_dtype="auto" is a searched axis; it needs '
+            'tune="cached" or tune="full"')
+
+
+def _untuned(name: str, config) -> TunePlan:
+    return TunePlan(executor=name, backend=backend_name(),
+                    n_devices=len(jax.devices()),
+                    params=current_params(name, config),
+                    compute_dtype=_resolved_dtype(config), reason="untuned")
+
+
+def resolve_plan(name: str, phi, problem, config, cache) -> Optional[TunePlan]:
+    """TunePlan for executor ``name`` on ``phi`` per ``config.tune`` mode.
+
+    Returns None when tuning is off.  Never measures under "cached"; under
+    "full" a warm cache hit also skips every measurement.
+    """
+    validate_config(config)
+    mode = getattr(config, "tune", "off")
+    if mode == "off":
+        return None
+
+    from repro.core.plan_cache import tune_plan_key
+    from repro.core.registry import REGISTRY
+
+    import numpy as np
+    d = problem.dictionary
+    key = tune_plan_key(
+        np.asarray(phi.atoms), np.asarray(phi.voxels), np.asarray(phi.fibers),
+        sizes=(phi.n_atoms, phi.n_voxels, phi.n_fibers),
+        n_theta=int(d.shape[1]), executor=name,
+        fmt=REGISTRY.consumes(name), backend=backend_name(),
+        n_devices=len(jax.devices()),
+        compute_dtype=getattr(config, "compute_dtype", "fp32"),
+        budget=int(getattr(config, "tune_budget", 0)),
+        mesh=(int(getattr(config, "shard_rows", 1)),
+              int(getattr(config, "shard_cols", 1))))
+    plan = cache.get_tune_plan(key)
+    if plan is not None:
+        return plan
+    if mode == "cached":
+        # miss: frozen constants, no measurement, nothing persisted (a later
+        # tune="full" run must still be able to search and fill this key)
+        return _untuned(name, config)
+
+    candidates = search_space(name, config,
+                              budget=getattr(config, "tune_budget", None))
+    if len(candidates) == 1:
+        # no tile axes and a fixed dtype: nothing to measure — persist the
+        # degenerate plan so tune="cached" rebuilds hit instead of missing
+        cand = candidates[0]
+        plan = TunePlan(executor=name, backend=backend_name(),
+                        n_devices=len(jax.devices()), params=cand["params"],
+                        compute_dtype=cand["compute_dtype"], reason="default")
+        cache.put_tune_plan(key, plan)
+        return plan
+
+    w_probe = jnp.ones((phi.n_fibers,), d.dtype)
+    y_probe = jnp.ones((phi.n_voxels, d.shape[1]), d.dtype)
+
+    def run(cand) -> float:
+        cfg = replace(config, tune="off", compute_dtype=cand["compute_dtype"])
+        if cand["params"]:
+            cfg = replace(cfg, **cand["params"])
+        ex = REGISTRY.create(name, phi, problem, cfg, cache)
+        return (DSC_WEIGHT * search.time_call(ex.matvec, w_probe)
+                + WC_WEIGHT * search.time_call(ex.rmatvec, y_probe))
+
+    best_i, costs = search.measure_candidates(candidates, run)
+    winner = candidates[best_i]
+    plan = TunePlan(executor=name, backend=backend_name(),
+                    n_devices=len(jax.devices()), params=winner["params"],
+                    compute_dtype=winner["compute_dtype"], reason="search",
+                    measurements=costs)
+    cache.put_tune_plan(key, plan)
+    return plan
+
+
+def tunable_executors() -> tuple:
+    """Executor names with at least one tile axis (introspection helper)."""
+    from repro.tune.space import TUNABLE_TILES
+    return tuple(sorted(TUNABLE_TILES))
+
+
+__all__ = ["resolve_plan", "validate_config", "backend_name",
+           "tunable_executors", "tile_axes", "DSC_WEIGHT", "WC_WEIGHT"]
