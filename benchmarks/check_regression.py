@@ -6,6 +6,13 @@ Fails (exit 1) when any row named in the baseline is missing from the new
 run (a gate must not pass by silently dropping coverage) or is more than
 ``--factor`` times slower after machine-speed normalization.
 
+A baseline row may instead carry a ``max_value`` field: the new value must
+stay at or below that absolute ceiling — no calibration scaling, no
+factor.  This is for dimensionless invariant rows (byte ratios, counts)
+where machine speed is irrelevant and the bound is a design claim, e.g.
+``table12.resident.fcoo_over_sell`` pinning F-COO's one-copy residency
+under 0.6x of SELL's two op-specific encodes.
+
 Normalization: both payloads carry ``calibration_us`` — the median time of
 a fixed interpret-mode kernel call on the machine that produced them.  The
 baseline's times are rescaled by the calibration ratio before the factor
@@ -23,7 +30,7 @@ import sys
 def load(path):
     with open(path) as f:
         payload = json.load(f)
-    rows = {r["name"]: float(r["us_per_call"]) for r in payload["results"]}
+    rows = {r["name"]: r for r in payload["results"]}
     return payload, rows
 
 
@@ -58,23 +65,38 @@ def main(argv=None) -> int:
 
     failures = []
     print(f"{'name':40s} {'base_us':>10s} {'new_us':>10s} {'ratio':>7s}")
-    for name, base_us in sorted(base.items()):
+    for name, row in sorted(base.items()):
+        base_us = float(row["us_per_call"])
         if name not in new:
             failures.append(f"missing row: {name}")
             print(f"{name:40s} {base_us:10.1f} {'MISSING':>10s}")
             continue
+        new_us = float(new[name]["us_per_call"])
+        if row.get("max_value") is not None:
+            # absolute ceiling: a machine-independent invariant, gated
+            # as-is (no calibration scaling, no factor)
+            ceiling = float(row["max_value"])
+            flag = ""
+            if new_us > ceiling:
+                failures.append(f"{name}: {new_us:.4f} exceeds absolute "
+                                f"ceiling max_value={ceiling}")
+                flag = "  << CEILING"
+            print(f"{name:40s} {base_us:10.4f} {new_us:10.4f} "
+                  f"{'<=' + format(ceiling, 'g'):>7s}{flag}")
+            continue
         allowed = base_us * scale
-        ratio = new[name] / allowed if allowed > 0 else float("inf")
+        ratio = new_us / allowed if allowed > 0 else float("inf")
         flag = ""
         if ratio > args.factor:
-            failures.append(f"{name}: {new[name]:.1f}us vs allowed "
+            failures.append(f"{name}: {new_us:.1f}us vs allowed "
                             f"{allowed:.1f}us x {args.factor} "
                             f"(ratio {ratio:.2f})")
             flag = "  << REGRESSION"
-        print(f"{name:40s} {base_us:10.1f} {new[name]:10.1f} "
+        print(f"{name:40s} {base_us:10.1f} {new_us:10.1f} "
               f"{ratio:7.2f}{flag}")
     for name in sorted(set(new) - set(base)):
-        print(f"{name:40s} {'-':>10s} {new[name]:10.1f}    new")
+        print(f"{name:40s} {'-':>10s} "
+              f"{float(new[name]['us_per_call']):10.1f}    new")
 
     if failures:
         print(f"\nFAIL: {len(failures)} regression(s) vs {args.baseline}:")

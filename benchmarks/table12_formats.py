@@ -14,8 +14,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, problem, time_fn
 from repro.core import spmv
-from repro.formats import AltoPhi, CooPhi, SellPhi
+from repro.formats import AltoPhi, CooPhi, FcooPhi, SellPhi
 from repro.formats import select as fsel
+from repro.formats.fcoo import dsc_reference as fcoo_dsc
+from repro.formats.fcoo import wc_reference as fcoo_wc
 from repro.formats.sell import dsc_reference, wc_reference
 
 
@@ -31,6 +33,7 @@ def run():
     sell_wc = SellPhi.encode(p.phi, op="wc")
     alto, _ = AltoPhi.encode(p.phi).sort()
     phi_lin = alto.decode()
+    fc = FcooPhi.encode(p.phi)                 # ONE encode serves both ops
 
     rows = [
         ("coo", "dsc", lambda: spmv.dsc(coo_dsc.phi, d, w),
@@ -45,11 +48,23 @@ def run():
          alto.padding_overhead, alto.nbytes),
         ("alto", "wc", lambda: spmv.wc_naive(phi_lin, d, y),
          alto.padding_overhead, alto.nbytes),
+        ("fcoo", "dsc", lambda: fcoo_dsc(fc, d, w),
+         fc.padding_overhead, fc.nbytes),
+        ("fcoo", "wc", lambda: fcoo_wc(fc, d, y),
+         fc.padding_overhead, fc.nbytes),
     ]
     for fmt, op, fn, overhead, nbytes in rows:
         us = time_fn(fn)
         emit(f"table12.{op}.{fmt}", us,
              f"pad={overhead:.2f}x;mbytes={nbytes / 1e6:.2f}")
+
+    # the F-COO residency claim (Liu et al. 1705.09905): one linearized
+    # copy serving both ops vs SELL's two op-specific encodes.  The row's
+    # value is the byte ratio itself (dimensionless, not microseconds) so
+    # the regression gate can pin it under an absolute ``max_value``.
+    sell_total = sell_dsc.nbytes + sell_wc.nbytes
+    emit("table12.resident.fcoo_over_sell", fc.nbytes / sell_total,
+         f"fcoo_mb={fc.nbytes / 1e6:.2f};sell_mb={sell_total / 1e6:.2f}")
 
     plan = fsel.choose_format(p.phi, d)
     emit("table12.selected", 0.0,

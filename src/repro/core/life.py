@@ -67,6 +67,8 @@ class LifeConfig:
     # dataset via formats/select.py, FormatPlan-cached).  DESIGN.md §7.
     format: str = "coo"
     slot_tile: int = 32             # SELL slots consumed per kernel grid step
+    seg_tile: int = 16              # F-COO segments-per-chunk rounding (the
+                                    # one-hot K dim of kernels/fcoo.py)
     # Kernel autotuning (DESIGN.md §10): "off" runs the frozen constants
     # above; "cached" replays a persisted TunePlan when one exists (never
     # measures); "full" searches the launch-parameter space on a cache miss

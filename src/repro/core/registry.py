@@ -25,6 +25,9 @@ The ladder (paper §6.3.1/§6.4.1):
                                   accumulation (no prefetch map, DESIGN.md §7)
   alto         linearized COO   : ALTO single-index sort order, one Phi copy
                                   serves both ops
+  kernel-fcoo  TPU Pallas/F-COO : segment-flagged linearization; ONE resident
+                                  copy feeds both ops via segment-scan
+                                  kernels (DESIGN.md §11)
   auto         runtime autotune : measured selection (paper §4.1.2)
   shard        mesh partition   : 2-D shard_map SpMVs over inner sorted-COO
                                   cells behind the same protocol
@@ -285,6 +288,25 @@ def _make_kernel_sell(phi, problem, config, cache) -> Executor:
                                   interpret=config.kernel_interpret,
                                   compute_dtype=cd),
         plans=dict(sell_dsc=sell_dsc, sell_wc=sell_wc))
+
+
+@REGISTRY.register("kernel-fcoo", consumes="fcoo")
+def _make_kernel_fcoo(phi, problem, config, cache) -> Executor:
+    """Pallas segment-scan executors over ONE F-COO copy (formats/fcoo.py).
+
+    Unlike kernel-sell there is no per-op encode: the single linearized
+    stream plus its segment metadata serves matvec AND rmatvec (the WC view
+    is a permutation gather, not a copy) — the one-copy residency DESIGN.md
+    §11 accounts for and table12 gates at 0.6x of SELL(DSC)+SELL(WC)."""
+    from repro.formats.fcoo import FcooPhi
+    from repro.kernels import ops as kops
+    fc = FcooPhi.encode(phi, c_tile=config.c_tile,
+                        seg_tile=getattr(config, "seg_tile", 16))
+    matvec, rmatvec = kops.make_fcoo_ops(
+        fc, problem.dictionary, interpret=config.kernel_interpret,
+        compute_dtype=_compute_dtype(config))
+    return Executor(name="kernel-fcoo", matvec=matvec, rmatvec=rmatvec,
+                    plans=dict(fcoo=fc))
 
 
 @REGISTRY.register("alto", consumes="alto")

@@ -7,6 +7,8 @@ Importing this package registers the built-in formats:
   sell  sliced-ELL/blocked layout for direct row-block Pallas
         accumulation (no prefetched row map, no one-hot)  — formats/sell.py
   alto  bit-interleaved linearized single-index encoding  — formats/alto.py
+  fcoo  segment-flagged linearization; ONE resident copy serves both
+        ops via segment-scan kernels (DESIGN.md §11)      — formats/fcoo.py
 
 ``formats.select`` picks one per dataset from inspector statistics with an
 autotune fallback; engines reach it via ``LifeConfig(format="auto")``.
@@ -21,11 +23,12 @@ from repro.formats.base import (FORMATS, FORMAT_VERSION, FormatPlan,
                                 get_format, register_format)
 from repro.formats.alto import AltoPhi
 from repro.formats.coo import CooPhi
+from repro.formats.fcoo import FcooPhi
 from repro.formats.sell import SellPhi
 from repro.formats.shard import ShardPhi, partition_cuts
 
 __all__ = [
     "FORMATS", "FORMAT_VERSION", "FormatPlan", "PhiFormat",
     "canonical_triples", "format_names", "get_format", "register_format",
-    "AltoPhi", "CooPhi", "SellPhi", "ShardPhi", "partition_cuts",
+    "AltoPhi", "CooPhi", "FcooPhi", "SellPhi", "ShardPhi", "partition_cuts",
 ]

@@ -1,0 +1,232 @@
+"""F-COO: one sorted, segment-flagged Phi linearization serving BOTH ops.
+
+Every other layout in this package is per-op: SELL encodes a voxel-row copy
+for DSC and a fiber-row copy for WC, doubling resident bytes per tenant.
+F-COO (Liu et al., arXiv:1705.09905) keeps *one* flat coefficient stream and
+moves the per-op irregularity into segment metadata:
+
+  * coefficients are lexsorted once, voxel-major ``(voxel, fiber, atom)`` —
+    the DSC order — and padded to a ``c_tile`` multiple with inert slots
+    (value 0, indices repeating the last real coefficient),
+  * the WC (fiber-major) view is a stable permutation ``wc_perm`` over the
+    same stream — no second copy of the index/value arrays,
+  * for each op the stream is cut into fixed ``c_tile`` chunks; within a
+    chunk, runs of equal output ids form *segments*.  The segment flags
+    (``ids[i] != ids[i-1]``, chunk-local) are stored prefix-summed as
+    per-slot segment ranks (``dsc_ranks`` / ``wc_ranks``), and a small
+    ``(n_chunks, K)`` map (``seg_rows_*``) names each segment's output row
+    (padding segments point at a dummy row one past the end).
+
+The kernel pair (:mod:`repro.kernels.fcoo`) turns each chunk's segment
+reduction into a one-hot ``(K, c_tile)`` MXU matmul and writes per-chunk
+segment partials; a single batched scatter-add over ``seg_rows_*`` folds
+chunk boundaries (a run split across chunks becomes two segments that land
+on the same output row).  Because every chunk owns its own output block,
+the grid needs no cross-step accumulation at all — the F-COO analogue of
+the paper's synchronization-free reduction.
+
+Accounting is fully honest: ``nbytes`` counts every array the executor
+keeps resident (stream + wc_perm + both rank vectors + both segment maps).
+That is ~28 B/coefficient versus the two SELL copies' padded slot arrays —
+``benchmarks/table12_formats.py`` reports the ratio and
+``benchmarks/check_regression.py`` gates it at 0.6x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Tuple
+
+import numpy as np
+
+from repro.core.std import PhiTensor
+from repro.formats.base import register_format
+
+DEFAULT_C_TILE = 256          # coefficients per chunk (grid step)
+DEFAULT_SEG_TILE = 16         # K (segments per chunk) rounds up to this
+
+
+def chunk_segment_map(ids: np.ndarray, c_tile: int, seg_tile: int,
+                      dummy_row: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Segment metadata for one op over a padded id stream.
+
+    ``ids``: int array, ``ids.size % c_tile == 0`` — the output ids of the
+    (already linearized) coefficient stream.  Returns
+    ``(seg_rows, ranks, k)``:
+
+      * ``ranks`` (int32, like ``ids``): chunk-local segment index of every
+        slot — the prefix sum of the segment flags
+        ``flag[i] = ids[i] != ids[i-1]`` with the flag reset at each chunk
+        boundary (this IS the segment-scan primitive, host-side),
+      * ``seg_rows`` (int32 ``(n_chunks, k)``): segment -> output row;
+        entries past a chunk's last segment hold ``dummy_row``,
+      * ``k``: max segments in any chunk, rounded up to ``seg_tile``.
+
+    Correctness does not require ``ids`` to be sorted — an unsorted stream
+    just fragments into more segments (larger ``k``); the scatter over
+    ``seg_rows`` lands every segment on its own row regardless.
+    """
+    if ids.size % c_tile:
+        raise ValueError(f"ids.size={ids.size} not a c_tile={c_tile} multiple")
+    n_chunks = ids.size // c_tile
+    if n_chunks == 0:
+        return (np.zeros((0, seg_tile), np.int32),
+                np.zeros((0,), np.int32), seg_tile)
+    ids2 = np.asarray(ids).reshape(n_chunks, c_tile)
+    flags = np.zeros((n_chunks, c_tile), np.int32)
+    flags[:, 1:] = ids2[:, 1:] != ids2[:, :-1]
+    ranks = np.cumsum(flags, axis=1, dtype=np.int32)
+    max_segs = int(ranks[:, -1].max()) + 1
+    k = -(-max_segs // seg_tile) * seg_tile
+    seg_rows = np.full((n_chunks, k), dummy_row, np.int32)
+    seg_rows[np.repeat(np.arange(n_chunks), c_tile),
+             ranks.reshape(-1)] = ids2.reshape(-1)
+    return seg_rows, ranks.reshape(-1), k
+
+
+@register_format
+@dataclasses.dataclass
+class FcooPhi:
+    """One resident F-COO linearization serving DSC and WC.
+
+    ``atoms``/``voxels``/``fibers``/``values``: the padded stream in DSC
+    (voxel-major) order.  ``wc_perm`` re-reads the same stream fiber-major.
+    ``dsc_ranks``/``wc_ranks`` are the per-slot chunk-local segment ranks,
+    ``seg_rows_dsc``/``seg_rows_wc`` the segment -> output-row maps (dummy
+    rows ``n_voxels`` / ``n_fibers`` absorb padding segments and are
+    trimmed by the combine).
+    """
+
+    name: ClassVar[str] = "fcoo"
+
+    atoms: np.ndarray                    # int32 (Ncp,)
+    voxels: np.ndarray                   # int32 (Ncp,)
+    fibers: np.ndarray                   # int32 (Ncp,)
+    values: np.ndarray                   # fp    (Ncp,)
+    wc_perm: np.ndarray                  # int32 (Ncp,) fiber-major view
+    dsc_ranks: np.ndarray                # int32 (Ncp,)
+    wc_ranks: np.ndarray                 # int32 (Ncp,)
+    seg_rows_dsc: np.ndarray             # int32 (n_chunks, k_dsc)
+    seg_rows_wc: np.ndarray              # int32 (n_chunks, k_wc)
+    c_tile: int
+    seg_tile: int
+    n_coeffs: int                        # real (unpadded) coefficient count
+    n_atoms: int
+    n_voxels: int
+    n_fibers: int
+
+    # -- encode / decode ------------------------------------------------------
+    @classmethod
+    def encode(cls, phi: PhiTensor, *, op: str = "dsc",
+               c_tile: int = DEFAULT_C_TILE,
+               seg_tile: int = DEFAULT_SEG_TILE, **_params) -> "FcooPhi":
+        """Linearize once; ``op`` is accepted for protocol uniformity and
+        ignored — the whole point is that one encode serves both ops."""
+        a = np.asarray(phi.atoms, np.int64)
+        v = np.asarray(phi.voxels, np.int64)
+        f = np.asarray(phi.fibers, np.int64)
+        vals = np.asarray(phi.values)
+        nc = a.size
+        # total order up to identical triples: any input permutation of the
+        # coefficients linearizes to the same layout (property-tested)
+        order = np.lexsort((a, f, v))
+        ncp = -(-nc // c_tile) * c_tile
+
+        def lay(x, fill):
+            out = np.empty(ncp, np.int32)
+            out[:nc] = x[order]
+            out[nc:] = fill
+            return out
+
+        atoms = lay(a, a[order[-1]] if nc else 0)
+        voxels = lay(v, v[order[-1]] if nc else 0)
+        fibers = lay(f, f[order[-1]] if nc else 0)
+        values = np.zeros(ncp, vals.dtype)
+        if nc:
+            values[:nc] = vals[order]
+        # fiber-major view over the SAME stream (stable: voxel-major within
+        # a fiber); padding slots repeat the last real fiber id, so they
+        # merge into its final segment and stay inert (value 0)
+        wc_perm = np.argsort(fibers, kind="stable").astype(np.int32)
+        seg_rows_dsc, dsc_ranks, _ = chunk_segment_map(
+            voxels, c_tile, seg_tile, phi.n_voxels)
+        seg_rows_wc, wc_ranks, _ = chunk_segment_map(
+            fibers[wc_perm], c_tile, seg_tile, phi.n_fibers)
+        return cls(atoms=atoms, voxels=voxels, fibers=fibers, values=values,
+                   wc_perm=wc_perm, dsc_ranks=dsc_ranks, wc_ranks=wc_ranks,
+                   seg_rows_dsc=seg_rows_dsc, seg_rows_wc=seg_rows_wc,
+                   c_tile=c_tile, seg_tile=seg_tile, n_coeffs=nc,
+                   n_atoms=phi.n_atoms, n_voxels=phi.n_voxels,
+                   n_fibers=phi.n_fibers)
+
+    def decode(self) -> PhiTensor:
+        import jax.numpy as jnp
+        nc = self.n_coeffs
+        return PhiTensor(
+            atoms=jnp.asarray(self.atoms[:nc]),
+            voxels=jnp.asarray(self.voxels[:nc]),
+            fibers=jnp.asarray(self.fibers[:nc]),
+            values=jnp.asarray(self.values[:nc]),
+            n_atoms=self.n_atoms, n_voxels=self.n_voxels,
+            n_fibers=self.n_fibers)
+
+    # -- geometry / accounting ------------------------------------------------
+    @property
+    def n_chunks(self) -> int:
+        return self.atoms.size // self.c_tile if self.c_tile else 0
+
+    @property
+    def k_dsc(self) -> int:
+        return self.seg_rows_dsc.shape[1]
+
+    @property
+    def k_wc(self) -> int:
+        return self.seg_rows_wc.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Every array the executor keeps resident — stream, WC view
+        permutation, both rank vectors, both segment maps.  Nothing is
+        excluded: this is the number the 0.6x-of-SELL gate holds."""
+        return int(self.atoms.nbytes + self.voxels.nbytes
+                   + self.fibers.nbytes + self.values.nbytes
+                   + self.wc_perm.nbytes + self.dsc_ranks.nbytes
+                   + self.wc_ranks.nbytes + self.seg_rows_dsc.nbytes
+                   + self.seg_rows_wc.nbytes)
+
+    @property
+    def padding_overhead(self) -> float:
+        """Padded slots / real coefficients - 1 (tail padding only)."""
+        return self.atoms.size / max(1, self.n_coeffs) - 1.0
+
+
+# ----------------------------------------------------------------------------
+# Pure-jnp reference executors over the F-COO layout.  Same dataflow as the
+# Pallas kernels (kernels/fcoo.py) minus the chunking: the test oracle, and
+# the measurement proxy formats/select.py times when arbitrating formats.
+# ----------------------------------------------------------------------------
+
+def dsc_reference(fc: FcooPhi, dictionary, w):
+    """y = M w over the linearized stream (padding slots carry value 0)."""
+    import jax.numpy as jnp
+    if fc.atoms.size == 0:
+        return jnp.zeros((fc.n_voxels, dictionary.shape[1]),
+                         dictionary.dtype)
+    atoms = jnp.asarray(fc.atoms)
+    voxels = jnp.asarray(fc.voxels)
+    scaled = jnp.take(w, jnp.asarray(fc.fibers)) * jnp.asarray(fc.values)
+    contrib = jnp.take(dictionary, atoms, axis=0) * scaled[:, None]
+    y = jnp.zeros((fc.n_voxels, dictionary.shape[1]), contrib.dtype)
+    return y.at[voxels].add(contrib)
+
+
+def wc_reference(fc: FcooPhi, dictionary, y):
+    """w = M^T y over the same resident stream."""
+    import jax.numpy as jnp
+    if fc.atoms.size == 0:
+        return jnp.zeros((fc.n_fibers,), dictionary.dtype)
+    atoms = jnp.asarray(fc.atoms)
+    voxels = jnp.asarray(fc.voxels)
+    dots = (jnp.take(dictionary, atoms, axis=0)
+            * jnp.take(y, voxels, axis=0)).sum(-1) * jnp.asarray(fc.values)
+    w = jnp.zeros((fc.n_fibers,), dots.dtype)
+    return w.at[jnp.asarray(fc.fibers)].add(dots)

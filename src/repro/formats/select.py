@@ -42,8 +42,10 @@ from repro.core import spmv
 from repro.core.inspector import phi_stats
 from repro.core.restructure import autotune_plan, sort_by_host
 from repro.core.std import PhiTensor
+from repro.formats import fcoo as fcoo_mod
 from repro.formats import sell as sell_mod
 from repro.formats.alto import AltoPhi
+from repro.formats.fcoo import FcooPhi
 from repro.formats.base import FormatPlan, format_names
 from repro.formats.sell import DEFAULT_ROW_TILE, DEFAULT_SLOT_TILE, SellPhi
 
@@ -53,7 +55,11 @@ DEFAULT_SELL_REJECT = 4.0
 
 #: format name -> executor registry name; None = defer to config.executor
 #: (COO is what every pre-existing executor already consumes)
-_FORMAT_EXECUTORS = {"coo": None, "sell": "kernel-sell", "alto": "alto"}
+_FORMAT_EXECUTORS = {"coo": None, "sell": "kernel-sell", "alto": "alto",
+                     "fcoo": "kernel-fcoo"}
+
+#: default "auto" candidate set (every leaf format)
+DEFAULT_CANDIDATES = ("coo", "sell", "alto", "fcoo")
 
 
 def _mesh_cells(config) -> int:
@@ -98,7 +104,7 @@ def choose_format(
     *,
     row_tile: int = DEFAULT_ROW_TILE,
     slot_tile: int = DEFAULT_SLOT_TILE,
-    allowed: Tuple[str, ...] = ("coo", "sell", "alto"),
+    allowed: Tuple[str, ...] = DEFAULT_CANDIDATES,
     sell_accept: float = DEFAULT_SELL_ACCEPT,
     sell_reject: float = DEFAULT_SELL_REJECT,
     cache=None,
@@ -155,6 +161,8 @@ def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
         if fmt == "alto":
             enc, order = AltoPhi.encode(p).sort()
             return enc.decode(), order
+        if fmt == "fcoo":
+            return FcooPhi.encode(p), None
         return sort_by_host(p, "voxel")            # coo
 
     def run(prepared, fmt: str):
@@ -162,6 +170,8 @@ def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
             return sell_mod.dsc_reference(prepared, dictionary, w_probe)
         if fmt == "alto":
             return spmv.dsc_naive(prepared, dictionary, w_probe)
+        if fmt == "fcoo":
+            return fcoo_mod.dsc_reference(prepared, dictionary, w_probe)
         return spmv.dsc(prepared, dictionary, w_probe)  # coo, voxel-sorted
 
     plan = autotune_plan("dsc", phi, run, candidates=tuple(allowed),
@@ -196,8 +206,8 @@ def resolve_format(phi: PhiTensor, problem, config, cache=None,
             raise ValueError(
                 f"format {fmt!r} is not supported here (allowed: {allowed})")
         return FormatPlan(fmt, "explicit", params)
-    candidates = tuple(allowed) if allowed is not None else ("coo", "sell",
-                                                             "alto")
+    candidates = (tuple(allowed) if allowed is not None
+                  else DEFAULT_CANDIDATES)
     if mesh_aware and _mesh_cells(config) > 1:
         from repro.core.registry import REGISTRY
         mesh_ok = tuple(f for f in candidates

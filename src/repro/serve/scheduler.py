@@ -32,7 +32,9 @@ explicit "coo" job stay in separate buckets even when selection would pick
 coo (resolving at submit would mean running format selection on the intake
 path).  SELL's per-subject static slot shapes cannot stack, so
 ``format="sell"`` jobs get solo buckets running a
-:class:`~repro.core.life.LifeEngine` behind the same stepped interface.
+:class:`~repro.core.life.LifeEngine` behind the same stepped interface;
+``format="fcoo"`` is solo for the same reason (per-subject static chunk
+and segment-map shapes).
 
 Continuous batching
 -------------------
@@ -90,7 +92,7 @@ from repro.data.dmri import LifeProblem
 #: inside BatchedLifeEngine; SELL widths are per-subject static shapes)
 BATCHABLE_FORMATS = ("auto", "coo", "alto")
 
-_SOLO_FORMATS = ("sell",)
+_SOLO_FORMATS = ("sell", "fcoo")
 
 
 def _is_solo(fmt: str, mesh: Optional[Tuple[int, int]]) -> bool:

@@ -19,10 +19,12 @@ from repro.tune.plan import COMPUTE_DTYPES
 #: executor registry name -> the launch-parameter axes its kernels take.
 #: The COO Pallas pair tiles coefficients (c_tile) into row blocks
 #: (row_tile); the SELL kernels and their per-cell shard variants walk
-#: (row_tile, slot_tile) blocks of the slot layout.
+#: (row_tile, slot_tile) blocks of the slot layout; the F-COO pair chunks
+#: the linearized stream (c_tile) with seg_tile-quantized segment blocks.
 TUNABLE_TILES: Dict[str, Tuple[str, ...]] = {
     "kernel": ("c_tile", "row_tile"),
     "kernel-sell": ("row_tile", "slot_tile"),
+    "kernel-fcoo": ("c_tile", "seg_tile"),
     "shard-sell": ("row_tile", "slot_tile"),
 }
 
@@ -33,6 +35,7 @@ AXIS_CANDIDATES: Dict[str, Tuple[int, ...]] = {
     "c_tile": (128, 256, 512),
     "row_tile": (8, 16),
     "slot_tile": (16, 32, 64),
+    "seg_tile": (8, 16, 32),
 }
 
 

@@ -42,17 +42,22 @@ _CFG = LifeConfig(executor="opt", c_tile=64, row_tile=8, slot_tile=16,
                   plan_cache_dir="")
 
 
-def _make_executor(name, fmt, problem):
-    cfg = dataclasses.replace(_CFG, executor=name, format=fmt)
+def _make_executor(name, fmt, problem, **overrides):
+    cfg = dataclasses.replace(_CFG, executor=name, format=fmt, **overrides)
     if fmt == "coo":
         return REGISTRY.create(name, problem.phi, problem, cfg, PlanCache(""))
     return create_for_format(problem.phi, problem, cfg, PlanCache(""))
 
 
 def test_matrix_covers_whole_registry():
-    """Every registered executor appears in exactly one format row."""
+    """Every registered executor appears in exactly one format row — and
+    the rows are *derived* (REGISTRY.consumes), never hand-kept, so the
+    F-COO pair is enumerated the moment ``kernel-fcoo`` registers."""
     assert sorted(ex for ex, _ in MATRIX) == sorted(REGISTRY.names())
     assert {fmt for _, fmt in MATRIX} == set(format_names())
+    assert ("kernel-fcoo", "fcoo") in MATRIX
+    assert REGISTRY.executors_for_format("fcoo") == ("kernel-fcoo",)
+    assert REGISTRY.consumes("kernel-fcoo") == "fcoo"
 
 
 @pytest.mark.parametrize("executor,fmt", MATRIX)
@@ -93,6 +98,41 @@ def test_sbbnnls_trajectories_match(executor, fmt, tiny_problem):
                                err_msg=f"{executor}/{fmt} losses")
     np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=2e-2,
                                atol=2e-3, err_msg=f"{executor}/{fmt} weights")
+
+
+# ----------------------------------------------------------------------------
+# differential fuzzing: randomized small problems, whole matrix, both dtypes
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", (0, 1))
+def test_differential_fuzz_whole_matrix(seed):
+    """Randomized problems cross-check every executor x format pair (the
+    new kernel-fcoo included, via the derived MATRIX) against the dense
+    oracle — fp32 under the tight contract, bf16 under the documented
+    BF16_RTOL/ATOL storage-rounding contract (repro/tune/plan.py)."""
+    from repro.core.std import materialize_dense
+    from repro.data.dmri import synth_connectome
+    from repro.tune.plan import BF16_ATOL, BF16_RTOL
+    p = synth_connectome(n_fibers=48, n_theta=12, n_atoms=16,
+                         grid=(8, 8, 8), seed=1000 + seed)
+    m = np.asarray(materialize_dense(p.phi, p.dictionary), np.float64)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.uniform(0, 1, p.phi.n_fibers), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(p.phi.n_voxels, 12)), jnp.float32)
+    want_mv = m @ np.asarray(w, np.float64)
+    want_rmv = m.T @ np.asarray(y, np.float64).reshape(-1)
+    for executor, fmt in MATRIX:
+        for cd, rtol, atol in (("fp32", 2e-4, 2e-5),
+                               ("bf16", BF16_RTOL, BF16_ATOL)):
+            ex = _make_executor(executor, fmt, p, compute_dtype=cd)
+            np.testing.assert_allclose(
+                np.asarray(ex.matvec(w), np.float64).reshape(-1), want_mv,
+                rtol=rtol, atol=atol,
+                err_msg=f"{executor}/{fmt}/{cd} matvec seed={seed}")
+            np.testing.assert_allclose(
+                np.asarray(ex.rmatvec(y), np.float64), want_rmv,
+                rtol=rtol, atol=atol,
+                err_msg=f"{executor}/{fmt}/{cd} rmatvec seed={seed}")
 
 
 # ----------------------------------------------------------------------------
@@ -213,6 +253,7 @@ def test_invalid_pairs_are_rejected():
     from repro.formats import select as fsel
     assert fsel.executor_for("sell", _CFG) == "kernel-sell"
     assert fsel.executor_for("alto", _CFG) == "alto"
+    assert fsel.executor_for("fcoo", _CFG) == "kernel-fcoo"
     # COO defers to the configured executor
     assert fsel.executor_for("coo", _CFG) == _CFG.executor
     with pytest.raises(ValueError):
@@ -225,6 +266,7 @@ def test_invalid_pairs_are_rejected():
     mesh_cfg = dataclasses.replace(_CFG, shard_rows=2, shard_cols=2)
     assert fsel.executor_for("coo", mesh_cfg) == "shard"
     assert fsel.executor_for("sell", mesh_cfg) == "shard-sell"
-    # alto has no sharded path: the mapping falls through, and
+    # alto/fcoo have no sharded path: the mapping falls through, and
     # create_for_format refuses rather than silently dropping the mesh
     assert fsel.executor_for("alto", mesh_cfg) == "alto"
+    assert fsel.executor_for("fcoo", mesh_cfg) == "kernel-fcoo"

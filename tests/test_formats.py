@@ -45,7 +45,7 @@ def _assert_same_triples(got: PhiTensor, want: PhiTensor):
 # ----------------------------------------------------------------------------
 
 def test_registry_lists_formats():
-    assert format_names() == ("alto", "coo", "sell")
+    assert format_names() == ("alto", "coo", "fcoo", "sell")
     assert get_format("sell") is SellPhi
     with pytest.raises(ValueError):
         get_format("csr")
@@ -246,11 +246,11 @@ def test_heuristic_rejects_sell_on_skew():
     plan = fsel.choose_format(phi, d, allowed=("coo", "sell"))
     assert plan.format == "coo" and plan.reason == "heuristic"
     assert plan.stats["dsc.sell_overhead"] >= fsel.DEFAULT_SELL_REJECT
-    # with alto also in the running the survivors are measured, so the
-    # alto candidate stays live (the BatchedLifeEngine auto path)
+    # with alto/fcoo also in the running the survivors are measured, so
+    # those candidates stay live — only sell is struck by the skew
     plan = fsel.choose_format(phi, d)
     assert plan.reason == "autotune"
-    assert plan.format in ("coo", "alto")
+    assert plan.format in ("coo", "alto", "fcoo")
 
 
 def test_autotune_fallback_runs_in_ambiguous_zone(tiny_problem):

@@ -43,6 +43,18 @@ def test_sell_jobs_get_solo_buckets(tiny_problem):
     np.testing.assert_array_equal(losses, l_ref)
 
 
+def test_fcoo_jobs_get_solo_buckets(tiny_problem):
+    """F-COO chunk/segment-map shapes are per-subject static — jobs run
+    solo (like SELL) but still match the direct LifeEngine result."""
+    svc = LifeService(_cfg(), slice_iters=5)
+    jid = svc.submit(tiny_problem, n_iters=12, format="fcoo")
+    w, losses = svc.run()[jid]
+    w_ref, l_ref = LifeEngine(tiny_problem,
+                              _cfg(format="fcoo", n_iters=12)).run()
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+    np.testing.assert_array_equal(losses, l_ref)
+
+
 def test_continuous_batching_admits_late_arrival(tiny_cohort):
     """A job submitted mid-flight joins the bucket's next micro-batch, and
     neither the in-flight jobs' trajectories nor the newcomer's differ from
@@ -130,10 +142,11 @@ def test_rejects_compaction_config():
 
 
 # ----------------------------------------------------------------------------
-# resume-after-kill (the acceptance criterion: identical weights, coo + sell)
+# resume-after-kill (the acceptance criterion: identical weights,
+# coo + sell + fcoo)
 # ----------------------------------------------------------------------------
 
-@pytest.mark.parametrize("fmt", ["coo", "sell"])
+@pytest.mark.parametrize("fmt", ["coo", "sell", "fcoo"])
 def test_interrupted_then_resumed_matches_uninterrupted(fmt, tiny_problem,
                                                         tmp_path):
     cfg = _cfg(n_iters=24)

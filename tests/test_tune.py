@@ -110,6 +110,7 @@ def test_search_space_dtype_axis():
     assert all(c["params"] == {} for c in cands)
     assert tile_axes("opt") == ()
     assert tile_axes("kernel") == ("c_tile", "row_tile")
+    assert tile_axes("kernel-fcoo") == ("c_tile", "seg_tile")
 
 
 # ----------------------------------------------------------------------------
@@ -143,6 +144,32 @@ def test_full_then_cached_zero_measurements(tmp_path, tiny_problem,
     assert eng2.tune_plan == plan1
     # ... and a warm tune="full" rebuild also skips the search
     eng3 = LifeEngine(tiny_problem, cfg)
+    assert eng3.tune_plan == plan1
+
+
+def test_full_then_cached_zero_measurements_fcoo(tmp_path, tiny_problem,
+                                                 monkeypatch):
+    """Same warm-rebuild contract for the F-COO executor: its tune axes
+    (c_tile, seg_tile) are searched once, then every rebuild — cached or
+    full — loads the persisted TunePlan without a single measurement."""
+    cfg = LifeConfig(executor="opt", format="fcoo", c_tile=64, seg_tile=16,
+                     n_iters=2, tune="full", tune_budget=4,
+                     plan_cache_dir=str(tmp_path))
+    eng1 = LifeEngine(tiny_problem, cfg)
+    plan1 = eng1.tune_plan
+    assert plan1 is not None and plan1.reason == "search"
+    assert plan1.executor == "kernel-fcoo"
+    assert plan1.measurements
+
+    from repro.tune import search as tsearch
+
+    def boom(*a, **k):
+        raise AssertionError("measurement despite warm tune-plan cache")
+
+    monkeypatch.setattr(tsearch, "time_call", boom)
+    eng2 = LifeEngine(tiny_problem, dataclasses.replace(cfg, tune="cached"))
+    assert eng2.tune_plan == plan1
+    eng3 = LifeEngine(tiny_problem, cfg)           # warm tune="full"
     assert eng3.tune_plan == plan1
 
 
@@ -287,6 +314,29 @@ def test_scheduler_buckets_split_on_tune_settings(tiny_cohort):
     members = sorted(tuple(sorted(j.job_id for j in b.jobs))
                      for b in s._buckets.values())
     assert members == [("a", "c"), ("b",)]
+    done = s.run_until_idle()
+    assert sorted(j.job_id for j in done) == ["a", "b", "c"]
+
+
+def test_fcoo_jobs_never_share_a_microbatch(tiny_cohort):
+    """F-COO is a solo format AND tune settings are part of the bucket
+    key: two fcoo jobs never co-batch, whether their tuning matches or
+    not — differently-tuned jobs sharing a micro-batch would force one
+    tenant's tile plan on the other."""
+    from repro.serve.scheduler import Job, Scheduler
+    s = Scheduler(LifeConfig(executor="opt", n_iters=4, plan_cache_dir=""))
+    s.submit(Job(job_id="a", problem=tiny_cohort[0], n_iters=4,
+                 format="fcoo"))
+    s.submit(Job(job_id="b", problem=tiny_cohort[1], n_iters=4,
+                 format="fcoo", compute_dtype="bf16"))
+    s.submit(Job(job_id="c", problem=tiny_cohort[2], n_iters=4,
+                 format="fcoo"))
+    s._admit()
+    members = sorted(tuple(sorted(j.job_id for j in b.jobs))
+                     for b in s._buckets.values())
+    assert members == [("a",), ("b",), ("c",)]
+    keys = {b.key for b in s._buckets.values()}
+    assert len(keys) == 3                      # distinct bucket identities
     done = s.run_until_idle()
     assert sorted(j.job_id for j in done) == ["a", "b", "c"]
 
