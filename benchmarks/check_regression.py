@@ -13,6 +13,13 @@ where machine speed is irrelevant and the bound is a design claim, e.g.
 ``table12.resident.fcoo_over_sell`` pinning F-COO's one-copy residency
 under 0.6x of SELL's two op-specific encodes.
 
+``--metrics PATH`` additionally gates the observability snapshot written
+by ``benchmarks/run.py --metrics`` (schema ``obs-1``): the plan cache's
+warm path must be perfect — gauge ``plan_cache.warm.hit_rate`` == 1.0 over
+a non-zero lookup count.  A warm rebuild that misses even once means plan
+keys stopped being stable across processes, which silently turns every
+serving bucket rebuild into a re-tune.
+
 Normalization: both payloads carry ``calibration_us`` — the median time of
 a fixed interpret-mode kernel call on the machine that produced them.  The
 baseline's times are rescaled by the calibration ratio before the factor
@@ -24,7 +31,11 @@ catching real slowdowns, not manufacturing them from calibration noise.
 """
 import argparse
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
 
 
 def load(path):
@@ -34,12 +45,34 @@ def load(path):
     return payload, rows
 
 
+def check_metrics(path) -> list:
+    """Invariant checks over an obs snapshot; returns failure strings."""
+    from repro.obs import snapshot_value
+    with open(path) as f:
+        snap = json.load(f)
+    failures = []
+    hit_rate = snapshot_value(snap, "gauges", "plan_cache.warm.hit_rate")
+    lookups = snapshot_value(snap, "gauges", "plan_cache.warm.lookups")
+    print(f"metrics: plan_cache.warm hit_rate={hit_rate} lookups={lookups}")
+    if not lookups:
+        failures.append("plan_cache.warm.lookups is zero/absent — the "
+                        "warm-path probe did not run")
+    if hit_rate != 1.0:
+        failures.append(f"plan_cache.warm.hit_rate == {hit_rate}, "
+                        f"expected 1.0 (warm rebuild must replay every "
+                        f"plan from disk)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
     ap.add_argument("new")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max allowed normalized slowdown (default 2.0)")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="also gate the obs snapshot at PATH "
+                         "(warm plan-cache hit rate == 1.0)")
     args = ap.parse_args(argv)
 
     base_payload, base = load(args.baseline)
@@ -97,6 +130,9 @@ def main(argv=None) -> int:
     for name in sorted(set(new) - set(base)):
         print(f"{name:40s} {'-':>10s} "
               f"{float(new[name]['us_per_call']):10.1f}    new")
+
+    if args.metrics:
+        failures.extend(check_metrics(args.metrics))
 
     if failures:
         print(f"\nFAIL: {len(failures)} regression(s) vs {args.baseline}:")

@@ -20,6 +20,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
+from repro.obs import quantile
+
 #: rows collected for --json: dicts of name / us_per_call / derived
 RESULTS = []
 
@@ -39,8 +41,7 @@ def time_fn(fn, *args, warmup=2, repeats=5):
         t0 = time.perf_counter()
         _block(fn(*args))
         times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+    return quantile(times, 50.0)
 
 
 def _block(out):
@@ -50,10 +51,39 @@ def _block(out):
     return out
 
 
-def emit(name, us, derived=""):
-    RESULTS.append(dict(name=str(name), us_per_call=float(us),
-                        derived=str(derived)))
+def emit(name, us, derived="", **fields):
+    """Record one row.  ``fields`` ride only in the JSON payload (e.g. the
+    roofline annotations below); the printed CSV stays three columns."""
+    row = dict(name=str(name), us_per_call=float(us), derived=str(derived))
+    row.update(fields)
+    RESULTS.append(row)
     print(f"{name},{us:.1f},{derived}")
+
+
+def roofline_fields(fn, us, *args):
+    """Roofline annotation fields for a timed jittable call.
+
+    Lowers ``fn(*args)`` and runs the trip-count-aware HLO cost model over
+    the compiled text, turning the measured microseconds into an
+    achieved-HBM-bandwidth fraction against the v5e roofline (analysis.HW),
+    plus the full Roofline term breakdown.  Best-effort: returns ``{}``
+    when the callable can't be lowered to costable HLO (interpret-mode
+    Pallas bodies always can — the cost model reads the HLO custom-call
+    wrapper's operands)."""
+    from repro.roofline import hlo_cost
+    from repro.roofline.analysis import HW, roofline
+    try:
+        txt = jax.jit(fn).lower(*args).compile().as_text()
+        cost = hlo_cost.analyze(txt, n_chips=1)
+    except Exception:
+        return {}
+    secs = us / 1e6
+    achieved = cost.bytes_accessed / secs if secs > 0 else 0.0
+    r = roofline(cost.flops, cost.bytes_accessed, 0.0, 1, cost.flops)
+    return dict(bytes_accessed=cost.bytes_accessed,
+                achieved_gbps=achieved / 1e9,
+                roofline_frac=achieved / HW["hbm_bw"],
+                roofline=r.as_dict())
 
 
 def calibration_us():

@@ -4,12 +4,25 @@ Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the machine-readable payload CI's bench-smoke lane gates on
 (see benchmarks/check_regression.py):
 
-    PYTHONPATH=src python -m benchmarks.run [--json out.json] [table ...]
+    PYTHONPATH=src python -m benchmarks.run [--json out.json]
+        [--metrics metrics.json] [table ...]
 
 JSON schema (version 1): environment fields (jax version, backend, device
 count), a ``config_digest`` identifying the run configuration, a
-``calibration_us`` machine-speed yardstick, and the ``results`` rows —
-exactly the CSV rows as objects.
+``calibration_us`` machine-speed yardstick, the ``results`` rows — exactly
+the CSV rows as objects (plus optional per-row annotation fields, e.g. the
+roofline fields on kernel rows) — and an ``obs_snapshot`` of the
+observability registry at end of run.
+
+The harness runs with observability enabled (``repro.obs``), so the
+instrumented production stack (plan cache, tuner, engines, serving)
+populates the registry as tables execute.  ``--metrics PATH`` writes that
+snapshot (plus the recorded span trace in Chrome-trace form) standalone —
+the METRICS_CI.json artifact CI uploads and gates with
+``check_regression.py --metrics``.  Note tables that reset the registry
+for their own bookkeeping (table13 resets per arrival rate) bound what the
+end-of-run snapshot accumulates; the gated warm-cache gauges are set after
+every table has run.
 """
 import argparse
 import hashlib
@@ -21,6 +34,7 @@ import time
 import jax
 
 from benchmarks import common
+from repro import obs
 from benchmarks import (table2_restructuring, table3_partitioning,
                         table4_opt_combos, table5_scaling,
                         table8_kernel_ladder, table9_param_sweep,
@@ -63,6 +77,30 @@ def config_digest(wanted) -> str:
     return h.hexdigest()[:16]
 
 
+def warm_cache_probe() -> None:
+    """Exercise the plan cache's warm path and pin the result in gauges.
+
+    Builds the Pallas-kernel engine twice against one fresh on-disk cache:
+    the first build misses and persists its tile plans, the second — read
+    through a brand-new PlanCache handle so no in-memory state helps —
+    must replay every plan from disk.  Gauges ``plan_cache.warm.hit_rate``
+    (CI gates this == 1.0 via ``check_regression.py --metrics``) and
+    ``plan_cache.warm.lookups`` record the outcome."""
+    import tempfile
+
+    from repro.core.life import LifeConfig, LifeEngine
+    from repro.core.plan_cache import PlanCache
+
+    p = common.problem(scale="small")
+    with tempfile.TemporaryDirectory() as d:
+        cfg = LifeConfig(executor="kernel", plan_cache_dir=d)
+        LifeEngine(p, cfg)                       # cold build: miss + persist
+        warm = PlanCache(d)
+        LifeEngine(p, cfg, warm)                 # warm build: hits only
+        obs.gauge("plan_cache.warm.hit_rate").set(warm.stats.hit_rate)
+        obs.gauge("plan_cache.warm.lookups").set(float(warm.stats.lookups))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="Run benchmark tables; CSV to stdout, optional JSON.")
@@ -70,6 +108,9 @@ def main(argv=None) -> None:
                     help=f"subset to run (default: all of {sorted(TABLES)})")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write machine-readable results to PATH")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="write the observability snapshot + span trace "
+                         "to PATH (the METRICS_CI.json artifact)")
     args = ap.parse_args(argv)
     unknown = [t for t in args.tables if t not in TABLES]
     if unknown:
@@ -77,11 +118,16 @@ def main(argv=None) -> None:
     wanted = args.tables or list(TABLES)
 
     common.reset_results()
+    obs.enable()
+    obs.reset()
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()
         TABLES[name].run()
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    warm_cache_probe()
+    snap = obs.snapshot()
 
     if args.json:
         payload = dict(
@@ -93,11 +139,20 @@ def main(argv=None) -> None:
             config_digest=config_digest(wanted),
             calibration_us=common.calibration_us(),
             results=common.RESULTS,
+            obs_snapshot=snap,
         )
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")
         print(f"# wrote {len(common.RESULTS)} rows to {args.json}",
+              file=sys.stderr)
+
+    if args.metrics:
+        metrics = dict(snap, trace_events=obs.TRACER.export_chrome())
+        with open(args.metrics, "w") as f:
+            json.dump(metrics, f, indent=2)
+            f.write("\n")
+        print(f"# wrote observability snapshot to {args.metrics}",
               file=sys.stderr)
 
 

@@ -12,7 +12,7 @@ ops over one linearized copy.
 """
 import jax.numpy as jnp
 
-from benchmarks.common import emit, problem, time_fn
+from benchmarks.common import emit, problem, roofline_fields, time_fn
 from repro.core import spmv
 from repro.formats import AltoPhi, CooPhi, FcooPhi, SellPhi
 from repro.formats import select as fsel
@@ -56,7 +56,8 @@ def run():
     for fmt, op, fn, overhead, nbytes in rows:
         us = time_fn(fn)
         emit(f"table12.{op}.{fmt}", us,
-             f"pad={overhead:.2f}x;mbytes={nbytes / 1e6:.2f}")
+             f"pad={overhead:.2f}x;mbytes={nbytes / 1e6:.2f}",
+             **roofline_fields(fn, us))
 
     # the F-COO residency claim (Liu et al. 1705.09905): one linearized
     # copy serving both ops vs SELL's two op-specific encodes.  The row's

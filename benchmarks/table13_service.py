@@ -3,20 +3,36 @@
 Simulates the production deployment (DESIGN.md §8): subjects arrive as a
 Poisson process — open-loop, so arrivals do not wait for the service — with
 mixed formats and priorities, and the LifeService micro-batches, time-slices
-and completes them.  Reported per arrival rate:
+and completes them.
 
-  * subjects/sec (completed jobs / wall time of the whole trace)
-  * p50 / p95 job latency (completion wall time - arrival wall time)
+The table is also the observability layer's end-to-end exercise: every
+reported number is read back from the ``repro.obs`` registry the serving
+stack instruments (DESIGN.md §12), not from ad-hoc bookkeeping in this
+file.  Per arrival rate:
+
+  * subjects/sec        counter ``serve.jobs.completed`` / trace wall time
+  * p50 / p95 latency   histogram ``serve.job.latency.seconds``
+  * queue depth         histogram ``serve.queue.depth`` (mean/max)
+  * plan-cache hit rate gauge ``plan_cache.hit_rate`` (via
+                        ``LifeService.metrics_snapshot()``)
+
+Rates run against one shared on-disk plan cache, so ``format="auto"``
+bucket builds re-resolve their FormatPlan from it — the first rate seeds
+the cache, later rates replay it warm.  ``obs.reset()`` between rates
+zeroes the registry in place (held instrument handles stay live), giving
+each rate fresh numbers without rebuilding the stack.
 
 The contrast with table11 (closed-loop, one pre-formed cohort) is the point:
 continuous batching keeps throughput near the batched optimum while bounding
 the latency an individual late arrival pays.
 """
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
+from repro import obs
 from repro.core.life import LifeConfig
 from repro.data.dmri import synth_cohort
 from repro.serve import LifeService
@@ -26,55 +42,75 @@ N_JOBS = 8
 SLICE = 10
 
 
-def _percentile(xs, q):
-    return float(np.percentile(np.asarray(xs), q))
-
-
-def run_trace(cohort, rate_per_s: float, seed: int = 0):
+def run_trace(cohort, rate_per_s: float, plan_dir: str, seed: int = 0):
     """Open-loop arrival trace: submit job i at its pre-drawn arrival time
-    regardless of service progress; tick the scheduler in between."""
+    regardless of service progress; tick the scheduler in between.
+
+    Returns (service, wall_seconds); completion counts and latencies are
+    read from the obs registry, which the scheduler and service populate.
+    """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_per_s, size=len(cohort))
     arrivals = np.cumsum(gaps)                    # seconds from t0
-    # mixed tenancy: every third job asks for SELL (solo bucket), one in
-    # four is high priority
-    specs = [("sell" if i % 3 == 2 else "coo", 5 if i % 4 == 0 else 0)
+    # mixed tenancy: every third job asks for SELL (solo bucket), the rest
+    # run format selection ("auto", FormatPlan-cached); one in four is
+    # high priority
+    specs = [("sell" if i % 3 == 2 else "auto", 5 if i % 4 == 0 else 0)
              for i in range(len(cohort))]
 
     svc = LifeService(LifeConfig(executor="opt", n_iters=N_ITERS,
-                                 plan_cache_dir=""), slice_iters=SLICE)
+                                 plan_cache_dir=plan_dir), slice_iters=SLICE)
     t0 = time.perf_counter()
     submitted = 0
-    finish_at = {}
-    arrive_at = {}
     while submitted < len(cohort) or svc.scheduler.active():
         now = time.perf_counter() - t0
         while submitted < len(cohort) and arrivals[submitted] <= now:
             fmt, pri = specs[submitted]
-            jid = svc.submit(cohort[submitted], job_id=f"s{submitted}",
-                             n_iters=N_ITERS, format=fmt, priority=pri)
-            arrive_at[jid] = now
+            svc.submit(cohort[submitted], job_id=f"s{submitted}",
+                       n_iters=N_ITERS, format=fmt, priority=pri)
             submitted += 1
         if svc.scheduler.active():
-            for job in svc.step():
-                finish_at[job.job_id] = time.perf_counter() - t0
+            svc.step()
         elif submitted < len(cohort):
             time.sleep(max(0.0, min(0.001, arrivals[submitted] - now)))
-    wall = time.perf_counter() - t0
-    lats = [finish_at[j] - arrive_at[j] for j in finish_at]
-    return wall, lats
+    return svc, time.perf_counter() - t0
 
 
 def run():
     cohort = synth_cohort(N_JOBS, base_seed=50, n_fibers=256, n_theta=64,
                           n_atoms=64, grid=(14, 14, 14))
-    for rate in (2.0, 8.0, 32.0):
-        wall, lats = run_trace(cohort, rate)
-        emit(f"table13.service.rate{rate:g}",
-             1e6 * float(np.mean(lats)),
-             f"{len(lats) / wall:.2f}subj/s;"
-             f"p50={_percentile(lats, 50) * 1e3:.0f}ms;"
-             f"p95={_percentile(lats, 95) * 1e3:.0f}ms")
+    was_enabled = obs.enabled()
+    obs.enable()
+    try:
+        with tempfile.TemporaryDirectory() as plan_dir:
+            for rate in (2.0, 8.0, 32.0):
+                obs.reset()
+                svc, wall = run_trace(cohort, rate, plan_dir)
+                svc.metrics_snapshot()        # mirrors cache stats to gauges
+                lat = obs.histogram("serve.job.latency.seconds")
+                depth = obs.histogram("serve.queue.depth")
+                completed = obs.value("serve.jobs.completed")
+                hit_rate = obs.value("plan_cache.hit_rate")
+                p50 = lat.quantile(50.0)
+                p95 = lat.quantile(95.0)
+                assert completed == obs.value("serve.jobs.admitted"), \
+                    "trace drained, yet admitted != completed"
+                emit(f"table13.service.rate{rate:g}",
+                     1e6 * lat.mean,
+                     f"{completed / wall:.2f}subj/s;"
+                     f"p50={p50 * 1e3:.0f}ms;"
+                     f"p95={p95 * 1e3:.0f}ms",
+                     subjects_per_s=completed / wall,
+                     p50_ms=p50 * 1e3, p95_ms=p95 * 1e3,
+                     queue_depth_mean=depth.mean,
+                     queue_depth_max=depth.max,
+                     preemptions=obs.value("serve.preemptions"),
+                     plan_cache_hit_rate=hit_rate)
+    finally:
+        # restore the ambient switch state; the last rate's metrics stay in
+        # the registry for run.py's end-of-run snapshot
+        if not was_enabled:
+            obs.disable()
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ Derived: speedup vs naive (JAX rows) / modeled v5e microseconds (kernel row).
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, problem, time_fn
+from benchmarks.common import emit, problem, roofline_fields, time_fn
 from repro.core import spmv
 from repro.core.inspector import auto_tile, plan_tiles
 from repro.core.restructure import sort_by_host
@@ -49,7 +49,9 @@ def run():
     t2_dsc = time_fn(spmv.dsc, phi_v, p.dictionary, w)
     emit("table8.dsc.naive", t0_dsc, "1.00x")
     emit("table8.dsc.restructured", t1_dsc, f"{t0_dsc / t1_dsc:.2f}x")
-    emit("table8.dsc.segment", t2_dsc, f"{t0_dsc / t2_dsc:.2f}x")
+    emit("table8.dsc.segment", t2_dsc, f"{t0_dsc / t2_dsc:.2f}x",
+         **roofline_fields(lambda w_: spmv.dsc(phi_v, p.dictionary, w_),
+                           t2_dsc, w))
 
     ct, rt = auto_tile(np.asarray(phi_v.voxels), p.phi.n_voxels)
     plan = plan_tiles(np.asarray(phi_v.voxels), p.phi.n_voxels,
@@ -58,21 +60,25 @@ def run():
     t3 = time_fn(mv, w, warmup=1, repeats=2)
     emit("table8.dsc.kernel-interpret", t3,
          f"modeled_v5e_us={_kernel_model_us(plan, 128):.1f}"
-         f";occupancy={plan.occupancy():.2f}")
+         f";occupancy={plan.occupancy():.2f}",
+         **roofline_fields(mv, t3, w))
 
     t0_wc = time_fn(spmv.wc_naive, p.phi, p.dictionary, y)
     t1_wc = time_fn(spmv.wc_atom_sorted, phi_f, p.dictionary, y)
     t2_wc = time_fn(spmv.wc, phi_f, p.dictionary, y)
     emit("table8.wc.naive", t0_wc, "1.00x")
     emit("table8.wc.restructured", t1_wc, f"{t0_wc / t1_wc:.2f}x")
-    emit("table8.wc.segment", t2_wc, f"{t0_wc / t2_wc:.2f}x")
+    emit("table8.wc.segment", t2_wc, f"{t0_wc / t2_wc:.2f}x",
+         **roofline_fields(lambda y_: spmv.wc(phi_f, p.dictionary, y_),
+                           t2_wc, y))
     ct, rt = auto_tile(np.asarray(phi_f.fibers), p.phi.n_fibers)
     wc_plan = plan_tiles(np.asarray(phi_f.fibers), p.phi.n_fibers,
                          c_tile=ct, row_tile=rt)
     rv = kops.make_wc(phi_f, p.dictionary, wc_plan, interpret=True)
     t4 = time_fn(rv, y, warmup=1, repeats=2)
     emit("table8.wc.kernel-interpret", t4,
-         f"occupancy={wc_plan.occupancy():.2f}")
+         f"occupancy={wc_plan.occupancy():.2f}",
+         **roofline_fields(rv, t4, y))
 
 
 if __name__ == "__main__":

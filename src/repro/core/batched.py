@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import spmv
 from repro.core.plan_cache import PlanCache
 from repro.core.registry import _DSC_FNS, _WC_FNS, REGISTRY
@@ -300,9 +301,20 @@ class BatchedLifeEngine:
         checkpoint keep their own Barzilai-Borwein parity — chained calls
         match one uninterrupted run exactly.  Returns (states, (S, k) loss
         trace)."""
-        new, losses = self._runner(self.phi_dsc, self.phi_wc, self.b,
-                                   states, n_iters=k)
-        return new, np.asarray(losses)
+        if not obs.SWITCH.on:
+            new, losses = self._runner(self.phi_dsc, self.phi_wc, self.b,
+                                       states, n_iters=k)
+            return new, np.asarray(losses)
+        with obs.span("engine.step", {"executor": self.config.executor,
+                                      "batched": self.n_subjects, "k": k}):
+            t0 = time.perf_counter()
+            new, losses = self._runner(self.phi_dsc, self.phi_wc, self.b,
+                                       states, n_iters=k)
+            losses = np.asarray(losses)   # host transfer blocks on the scan
+            obs.histogram("engine.step.seconds",
+                          executor=self.config.executor).observe(
+                time.perf_counter() - t0)
+        return new, losses
 
     def run(self, n_iters: Optional[int] = None,
             w0: Optional[jax.Array] = None

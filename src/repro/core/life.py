@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.plan_cache import PlanCache
 from repro.core.registry import REGISTRY, Executor, create_for_format
 from repro.core.restructure import compact_by_weight
@@ -132,7 +133,21 @@ class LifeEngine:
                 phi, self.problem, self.config, self.cache)
         self.matvec = self.executor.matvec
         self.rmatvec = self.executor.rmatvec
-        self.inspector_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.inspector_seconds += dt
+        obs.histogram("engine.build.seconds").observe(dt)
+        # held instruments for the hot step loop (no-ops while disabled);
+        # HLO byte counts are invalidated here because compaction rebinds
+        # the SpMV closures over a smaller Phi
+        self._op_bytes: Optional[dict] = None
+        self._h_step = obs.histogram("engine.step.seconds",
+                                     executor=self.executor.name)
+        self._g_frac = obs.gauge("engine.roofline.fraction",
+                                 executor=self.executor.name,
+                                 format=self.config.format)
+        self._g_bw = obs.gauge("engine.achieved_bandwidth.gbps",
+                               executor=self.executor.name,
+                               format=self.config.format)
 
     @property
     def dsc_plan(self):
@@ -183,9 +198,65 @@ class LifeEngine:
         State in -> k iters -> state out; the iteration counter rides in the
         state, so chained calls reproduce one uninterrupted run exactly.
         The serving scheduler time-slices long solves through this."""
-        new, ls = sbbnnls_steps(self.matvec, self.rmatvec, self.problem.b,
-                                state, k)
-        return new, np.asarray(ls)
+        if not obs.SWITCH.on:
+            new, ls = sbbnnls_steps(self.matvec, self.rmatvec,
+                                    self.problem.b, state, k)
+            return new, np.asarray(ls)
+        with obs.span("engine.step", {"executor": self.executor.name,
+                                      "format": self.config.format,
+                                      "k": k}) as sp:
+            t0 = time.perf_counter()
+            new, ls = sbbnnls_steps(self.matvec, self.rmatvec,
+                                    self.problem.b, state, k)
+            ls = np.asarray(ls)     # host transfer blocks on the computation
+            dt = time.perf_counter() - t0
+            self._h_step.observe(dt)
+            self._annotate_roofline(sp, k, dt)
+        return new, ls
+
+    def _annotate_roofline(self, sp, k: int, dt: float) -> None:
+        """Set achieved-bandwidth gauges from HLO byte counts (obs-on only).
+
+        Bytes per SBBNNLS iteration follow the tuner's dominant-op mix
+        (DSC every iteration + line-search probe, WC on alternation):
+        ``DSC_WEIGHT * dsc_bytes + WC_WEIGHT * wc_bytes``.  Fraction is
+        against the roofline model's HBM bandwidth (analysis.HW)."""
+        bytes_per_iter = self._op_bytes_per_iter()
+        if bytes_per_iter is None or dt <= 0.0:
+            return
+        from repro.roofline.analysis import HW
+        achieved = bytes_per_iter * k / dt
+        frac = achieved / HW["hbm_bw"]
+        self._g_bw.set(achieved / 1e9)
+        self._g_frac.set(frac)
+        sp.set_attr("bytes_accessed", bytes_per_iter * k)
+        sp.set_attr("achieved_gbps", achieved / 1e9)
+        sp.set_attr("roofline_fraction", frac)
+
+    def _op_bytes_per_iter(self) -> Optional[float]:
+        """Weighted HBM bytes of one SBBNNLS iteration, from the compiled
+        HLO of the bound SpMV pair (lazy, memoized until the next _build;
+        None when either op can't be lowered/costed)."""
+        if self._op_bytes is None:
+            from repro.roofline import hlo_cost
+            from repro.tune.tuner import DSC_WEIGHT, WC_WEIGHT
+            d = self.problem.dictionary
+            probes = ((self.matvec, jnp.ones((self.phi.n_fibers,), d.dtype)),
+                      (self.rmatvec,
+                       jnp.ones((self.phi.n_voxels, d.shape[1]), d.dtype)))
+            try:
+                dsc_b, wc_b = (
+                    hlo_cost.analyze(
+                        jax.jit(fn).lower(probe).compile().as_text(),
+                        n_chips=1).bytes_accessed
+                    for fn, probe in probes)
+                self._op_bytes = dict(
+                    per_iter=DSC_WEIGHT * dsc_b + WC_WEIGHT * wc_b)
+            except Exception:
+                # interpret-mode kernels / exotic layouts may not lower to
+                # costable HLO — roofline annotation is best-effort
+                self._op_bytes = dict(per_iter=None)
+        return self._op_bytes["per_iter"]
 
     def run(self, n_iters: Optional[int] = None,
             w0: Optional[jax.Array] = None) -> Tuple[jax.Array, np.ndarray]:

@@ -32,6 +32,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.inspector import ShardPlan, TilePlan
 from repro.core.restructure import SpmvPlan
 from repro.formats.base import FORMAT_VERSION as _PHI_FORMAT_VERSION
@@ -156,11 +157,27 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
 
-    def record(self, hit: bool) -> None:
+    def record(self, hit: bool, kind: str = "plan") -> None:
         if hit:
             self.hits += 1
         else:
             self.misses += 1
+        # export the lookup to the obs registry, labeled by plan kind
+        # (DESIGN.md §12.2); the local fields above stay authoritative —
+        # they count lookups made while observability was disabled too
+        if obs.SWITCH.on:
+            obs.counter("plan_cache.lookups", kind=kind,
+                        outcome="hit" if hit else "miss").inc()
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        """hits / lookups; 0.0 before the first lookup."""
+        n = self.lookups
+        return self.hits / n if n else 0.0
 
 
 class PlanCache:
@@ -253,7 +270,7 @@ class PlanCache:
     # -- TilePlan -------------------------------------------------------------
     def get_tile_plan(self, key: str) -> Optional[TilePlan]:
         raw = self._read(key)
-        self.stats.record(raw is not None)
+        self.stats.record(raw is not None, "tile")
         if raw is None:
             return None
         try:
@@ -276,7 +293,7 @@ class PlanCache:
     # -- SpmvPlan -------------------------------------------------------------
     def get_spmv_plan(self, key: str) -> Optional[SpmvPlan]:
         raw = self._read(key)
-        self.stats.record(raw is not None)
+        self.stats.record(raw is not None, "spmv")
         if raw is None:
             return None
         try:
@@ -297,7 +314,7 @@ class PlanCache:
     # -- ShardPlan ------------------------------------------------------------
     def get_shard_plan(self, key: str) -> Optional[ShardPlan]:
         raw = self._read(key)
-        self.stats.record(raw is not None)
+        self.stats.record(raw is not None, "shard")
         if raw is None:
             return None
         try:
@@ -318,7 +335,7 @@ class PlanCache:
     def get_tune_plan(self, key: str):
         from repro.tune.plan import TunePlan
         raw = self._read(key)
-        self.stats.record(raw is not None)
+        self.stats.record(raw is not None, "tune")
         if raw is None:
             return None
         try:
@@ -351,7 +368,7 @@ class PlanCache:
     # -- FormatPlan -----------------------------------------------------------
     def get_format_plan(self, key: str) -> Optional[FormatPlan]:
         raw = self._read(key)
-        self.stats.record(raw is not None)
+        self.stats.record(raw is not None, "format")
         if raw is None:
             return None
         try:

@@ -1,0 +1,80 @@
+"""Observability: metrics + span tracing for the whole serving stack.
+
+One process-global :class:`~repro.obs.metrics.MetricsRegistry` and one
+:class:`~repro.obs.trace.Tracer`, off by default (``enable()`` or
+``$REPRO_OBS=1`` arms them), with a hard overhead contract: disabled
+instrument calls are allocation-free no-ops, so the scheduler, the plan
+cache, the tuner and the engine step loop are instrumented
+unconditionally (DESIGN.md §12).
+
+Hot-path idiom — fetch instruments once, hold them, guard any *extra*
+work (timing reads, byte-count lookups) behind ``SWITCH.on``::
+
+    from repro import obs
+
+    class Scheduler:
+        def __init__(self):
+            self._m_admitted = obs.counter("serve.jobs.admitted")
+
+        def submit(self, job):
+            self._m_admitted.inc()          # no-op when disabled
+            if obs.SWITCH.on:               # guard the monotonic() reads
+                ...
+
+``snapshot()`` serializes every instrument into the JSON structure the
+bench harness embeds in its schema-1 payload (``benchmarks/run.py
+--json``/``--metrics``) and CI gates on (``check_regression.py
+--metrics``).
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (MetricsRegistry, quantile,  # noqa: F401
+                               snapshot_value)
+from repro.obs.runtime import SWITCH, disable, enable, enabled  # noqa: F401
+from repro.obs.trace import Tracer  # noqa: F401
+
+#: process-global instances — the ones the production stack instruments
+METRICS = MetricsRegistry()
+TRACER = Tracer()
+
+# bound convenience accessors: obs.counter(...) etc.
+counter = METRICS.counter
+gauge = METRICS.gauge
+histogram = METRICS.histogram
+value = METRICS.value
+total = METRICS.total
+span = TRACER.span
+
+
+def record_cache_stats(stats, prefix: str = "plan_cache") -> None:
+    """Mirror a :class:`~repro.core.plan_cache.CacheStats` into gauges.
+
+    The stats object counts every lookup since the cache was built —
+    including ones made while observability was disabled — so engines and
+    services surface it as authoritative gauges at snapshot time rather
+    than relying on the live lookup counters alone."""
+    METRICS.gauge(f"{prefix}.hits").set(float(stats.hits))
+    METRICS.gauge(f"{prefix}.misses").set(float(stats.misses))
+    METRICS.gauge(f"{prefix}.hit_rate").set(float(stats.hit_rate))
+
+
+def snapshot() -> dict:
+    """Serialize every metric (+ trace accounting) to a JSON-ready dict."""
+    snap = METRICS.snapshot()
+    snap["spans"] = dict(recorded=sum(1 for _ in _iter_spans()),
+                         roots=len(TRACER.roots), dropped=TRACER.dropped)
+    return snap
+
+
+def _iter_spans():
+    stack = list(TRACER.roots)
+    while stack:
+        s = stack.pop()
+        stack.extend(s.children)
+        yield s
+
+
+def reset() -> None:
+    """Zero every metric in place and drop all recorded spans."""
+    METRICS.reset()
+    TRACER.reset()

@@ -1,0 +1,38 @@
+"""The one switch every instrument checks (DESIGN.md §12.1).
+
+Observability is off by default and every hot-path instrument call must
+degrade to a single attribute check when it is — engines, kernels and the
+scheduler are instrumented unconditionally, so the disabled path *is* the
+production path.  The switch is a slotted singleton rather than a module
+global so both :mod:`repro.obs.metrics` and :mod:`repro.obs.trace` share
+one mutable flag without import-order games, and reading it
+(``SWITCH.on``) allocates nothing.
+
+``$REPRO_OBS=1`` arms the switch at import time (e.g. for a bench run or
+a service deployment launched without code changes).
+"""
+from __future__ import annotations
+
+import os
+
+
+class _Switch:
+    __slots__ = ("on",)
+
+    def __init__(self, on: bool = False):
+        self.on = on
+
+
+SWITCH = _Switch(os.environ.get("REPRO_OBS", "") in ("1", "true", "yes"))
+
+
+def enable() -> None:
+    SWITCH.on = True
+
+
+def disable() -> None:
+    SWITCH.on = False
+
+
+def enabled() -> bool:
+    return SWITCH.on

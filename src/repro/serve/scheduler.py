@@ -80,6 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.batched import BatchedLifeEngine
 from repro.core.life import LifeConfig, LifeEngine
 from repro.core.registry import REGISTRY
@@ -292,6 +293,21 @@ class Scheduler:
         self._buckets: Dict[Tuple, _Bucket] = {}
         self._jobs: Dict[str, Job] = {}
         self._arrivals = itertools.count()
+        self._last_served: Optional[Tuple] = None
+        # obs instruments, fetched once and held (DESIGN.md §12.2) — every
+        # call below is an allocation-free no-op while obs is disabled.
+        # Counter invariant, maintained across submit()/tick():
+        #   serve.jobs.admitted == serve.jobs.completed
+        #                          + serve.queue.depth + serve.jobs.running
+        self._m_admitted = obs.counter("serve.jobs.admitted")
+        self._m_completed = obs.counter("serve.jobs.completed")
+        self._m_preempted = obs.counter("serve.preemptions")
+        self._g_queue = obs.gauge("serve.queue.depth")
+        self._g_running = obs.gauge("serve.jobs.running")
+        self._g_buckets = obs.gauge("serve.buckets.live")
+        self._h_queue = obs.histogram("serve.queue.depth")
+        self._h_occupancy = obs.histogram("serve.bucket.occupancy")
+        self._h_slice = obs.histogram("serve.slice.seconds")
 
     # -- intake ------------------------------------------------------------
     def submit(self, job: Job) -> Job:
@@ -340,6 +356,8 @@ class Scheduler:
             job.submitted_at = time.monotonic()
         self._jobs[job.job_id] = job
         self._queue.append(job)
+        self._m_admitted.inc()
+        self._g_queue.set(float(len(self._queue)))
         return job
 
     def _bucket_key(self, job: Job) -> Tuple:
@@ -369,16 +387,39 @@ class Scheduler:
         """Admit arrivals, serve the most urgent bucket one time slice.
 
         Returns the jobs that completed during this tick."""
-        self._admit()
-        live = [b for b in self._buckets.values() if b.jobs]
-        if not live:
-            return []
-        bucket = min(live, key=_Bucket.urgency)
-        finished = bucket.run_slice(self.config, self.cache,
-                                    self.slice_iters)
-        if not bucket.jobs:
-            del self._buckets[bucket.key]
-        return finished
+        with obs.span("scheduler.tick"):
+            self._h_queue.observe(float(len(self._queue)))
+            self._admit()
+            self._g_queue.set(0.0)         # _admit drained the queue
+            live = [b for b in self._buckets.values() if b.jobs]
+            self._g_buckets.set(float(len(live)))
+            self._g_running.set(float(sum(len(b.jobs) for b in live)))
+            if not live:
+                return []
+            bucket = min(live, key=_Bucket.urgency)
+            # a preemption = the most urgent bucket displaced the one served
+            # last tick while that one still had members waiting to run
+            last = self._last_served
+            if (last is not None and last != bucket.key
+                    and last in self._buckets and self._buckets[last].jobs):
+                self._m_preempted.inc()
+            self._last_served = bucket.key
+            self._h_occupancy.observe(float(len(bucket.jobs)))
+            timed = obs.SWITCH.on          # guard the clock reads, not just
+            t0 = time.monotonic() if timed else 0.0   # the observe() call
+            with obs.span("scheduler.slice",
+                          {"format": bucket.format,
+                           "jobs": len(bucket.jobs)}):
+                finished = bucket.run_slice(self.config, self.cache,
+                                            self.slice_iters)
+            if timed:
+                self._h_slice.observe(time.monotonic() - t0)
+            if finished:
+                self._m_completed.inc(float(len(finished)))
+                self._g_running.dec(float(len(finished)))
+            if not bucket.jobs:
+                del self._buckets[bucket.key]
+            return finished
 
     def active(self) -> bool:
         return bool(self._queue) or any(b.jobs

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import manager as ckpt
 from repro.core.life import LifeConfig
 from repro.core.plan_cache import PlanCache
@@ -54,6 +55,11 @@ class LifeService:
         self._completed: Dict[str, Job] = {}
         # job_id -> (restored arrays, manifest meta) awaiting resubmission
         self._resumable: Dict[str, Tuple[dict, dict]] = {}
+        # obs instruments (no-ops while disabled, DESIGN.md §12.2)
+        self._h_latency = obs.histogram("serve.job.latency.seconds")
+        self._m_checkpoints = obs.counter("serve.checkpoints")
+        self._m_ckpt_jobs = obs.counter("serve.jobs.checkpointed")
+        self._m_resumed = obs.counter("serve.jobs.resumed")
         if ckpt_dir:
             self._load_resumable(ckpt_dir)
 
@@ -168,6 +174,7 @@ class LifeService:
                 job.deadline = now + float(meta["deadline_remaining"])
             if "losses" in arrays:
                 job.losses = [np.asarray(arrays["losses"])]
+            self._m_resumed.inc()
         self.scheduler.submit(job)
         self._resumable.pop(job_id, None)
         return job_id
@@ -179,6 +186,8 @@ class LifeService:
         self._tick += 1
         for job in finished:
             self._completed[job.job_id] = job
+            if job.finished_at is not None:
+                self._h_latency.observe(job.finished_at - job.submitted_at)
         if (self.ckpt_dir and self.checkpoint_every > 0
                 and self._tick % self.checkpoint_every == 0):
             self.checkpoint()
@@ -207,6 +216,10 @@ class LifeService:
         instead of re-running the whole solve."""
         if not self.ckpt_dir:
             return None
+        with obs.span("service.checkpoint"):
+            return self._checkpoint()
+
+    def _checkpoint(self) -> Optional[str]:
         tree: Dict[str, Dict[str, np.ndarray]] = {}
         meta: Dict[str, dict] = {}
         now = time.monotonic()
@@ -239,6 +252,8 @@ class LifeService:
             if job_id not in tree:
                 tree[job_id] = {k: np.asarray(v) for k, v in arrays.items()}
                 meta[job_id] = m
+        self._m_checkpoints.inc()
+        self._m_ckpt_jobs.inc(float(len(tree)))
         return ckpt.save(self.ckpt_dir, self._tick, tree,
                          meta={"jobs": meta}, keep=self.keep)
 
@@ -256,3 +271,14 @@ class LifeService:
     @property
     def cache_stats(self):
         return self.scheduler.cache.stats
+
+    def metrics_snapshot(self) -> dict:
+        """The obs snapshot with the service's plan-cache stats mirrored in
+        as authoritative gauges (``plan_cache.hits`` / ``.misses`` /
+        ``.hit_rate`` — counted since the cache was built, including
+        lookups made while obs was disabled).  This is the serving metric
+        surface the ROADMAP names: queue depth, latency quantiles,
+        completion counters, and plan-cache hit rate, one JSON-ready
+        dict."""
+        obs.record_cache_stats(self.scheduler.cache.stats)
+        return obs.snapshot()

@@ -29,6 +29,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.tune import search
 from repro.tune.plan import COMPUTE_DTYPES, TUNE_MODES, TunePlan
 from repro.tune.space import current_params, search_space, tile_axes
@@ -130,7 +131,15 @@ def resolve_plan(name: str, phi, problem, config, cache) -> Optional[TunePlan]:
         return (DSC_WEIGHT * search.time_call(ex.matvec, w_probe)
                 + WC_WEIGHT * search.time_call(ex.rmatvec, y_probe))
 
-    best_i, costs = search.measure_candidates(candidates, run)
+    with obs.span("tune.search", {"executor": name,
+                                  "candidates": len(candidates)}):
+        best_i, costs = search.measure_candidates(candidates, run)
+    # cold path (a search compiles + times every candidate), so per-call
+    # instrument fetch is fine here — no need to hold references
+    obs.counter("tune.searches", executor=name).inc()
+    obs.counter("tune.measurements").inc(float(len(candidates)))
+    obs.histogram("tune.measurements.per_search").observe(
+        float(len(candidates)))
     winner = candidates[best_i]
     plan = TunePlan(executor=name, backend=backend_name(),
                     n_devices=len(jax.devices()), params=winner["params"],

@@ -24,6 +24,19 @@ TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
 
 
 @pytest.fixture(autouse=True)
+def _obs_disabled_and_clean():
+    """Observability starts disabled and empty for every test — a test
+    that enables it (tests/test_obs.py, serving counter checks) cannot
+    leak instrument state or the enabled switch into the next test."""
+    from repro import obs
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture(autouse=True)
 def _isolated_plan_cache(tmp_path, monkeypatch):
     """Route all plan caching to a per-test tmpdir and clear the in-process
     autotune memo, so no test's outcome depends on suite ordering or on a
