@@ -61,6 +61,18 @@ def check_metrics(path) -> list:
         failures.append(f"plan_cache.warm.hit_rate == {hit_rate}, "
                         f"expected 1.0 (warm rebuild must replay every "
                         f"plan from disk)")
+    # table13's benign trace runs after its failure-injection scenario
+    # resets the registry: any nonzero count here means failure isolation
+    # misfired on healthy tenants (or the serving trace did not run at all)
+    failed = snapshot_value(snap, "counters", "serve.jobs.failed")
+    print(f"metrics: serve.jobs.failed={failed}")
+    if failed is None:
+        failures.append("serve.jobs.failed absent — the table13 serving "
+                        "trace did not run")
+    elif failed != 0.0:
+        failures.append(f"serve.jobs.failed == {failed}, expected 0 on the "
+                        f"benign table13 trace (a healthy tenant was "
+                        f"condemned by failure isolation)")
     return failures
 
 

@@ -1,9 +1,17 @@
-"""Beyond-paper: serving throughput + latency under an open-loop trace.
+"""Beyond-paper: async serving throughput + latency under an open-loop trace.
 
-Simulates the production deployment (DESIGN.md §8): subjects arrive as a
-Poisson process — open-loop, so arrivals do not wait for the service — with
-mixed formats and priorities, and the LifeService micro-batches, time-slices
-and completes them.
+Simulates the production deployment (DESIGN.md §8, §13): subjects arrive
+as a Poisson process — open-loop, so arrivals do not wait for the service —
+with mixed formats and priorities, submitted through the async front line
+(:class:`repro.serve.LifeFrontend`): ``submit_async`` returns a handle, the
+frontend's driver thread owns the tick loop, and the producer only blocks
+when the bounded admission queue backpressures it.
+
+Before the benign rates, a failure-isolation scenario (§13.3) runs one
+always-raising tenant against a deliberately tiny admission queue: every
+healthy job must complete, only the poisoned job may fail, and its
+exception must surface on its handle — the wedge-on-error regression gate,
+exercised at benchmark scale rather than test scale.
 
 The table is also the observability layer's end-to-end exercise: every
 reported number is read back from the ``repro.obs`` registry the serving
@@ -11,21 +19,28 @@ stack instruments (DESIGN.md §12), not from ad-hoc bookkeeping in this
 file.  Per arrival rate:
 
   * subjects/sec        counter ``serve.jobs.completed`` / trace wall time
-  * p50 / p95 latency   histogram ``serve.job.latency.seconds``
+  * p50 / p95 latency   histogram ``serve.job.latency.seconds`` (measured
+                        from service admission; admission-queue wait under
+                        backpressure is bounded by the driver's drain rate)
   * queue depth         histogram ``serve.queue.depth`` (mean/max)
   * plan-cache hit rate gauge ``plan_cache.hit_rate`` (via
                         ``LifeService.metrics_snapshot()``)
 
 Rates run against one shared on-disk plan cache, so ``format="auto"``
-bucket builds re-resolve their FormatPlan from it — the first rate seeds
-the cache, later rates replay it warm.  ``obs.reset()`` between rates
-zeroes the registry in place (held instrument handles stay live), giving
-each rate fresh numbers without rebuilding the stack.
+bucket builds re-resolve their FormatPlan from it — the failure scenario
+and the first rate seed the cache, later rates replay it warm.
+``obs.reset()`` between rates zeroes the registry in place (held
+instrument handles stay live), giving each rate fresh numbers without
+rebuilding the stack.  The benign rates run *after* the failure scenario's
+reset, so the end-of-run snapshot CI gates (METRICS_CI.json) must show
+``serve.jobs.failed == 0`` — checked both here and by
+``check_regression.py --metrics``.
 
 The contrast with table11 (closed-loop, one pre-formed cohort) is the point:
 continuous batching keeps throughput near the batched optimum while bounding
 the latency an individual late arrival pays.
 """
+import dataclasses
 import tempfile
 import time
 
@@ -35,18 +50,25 @@ from benchmarks.common import emit
 from repro import obs
 from repro.core.life import LifeConfig
 from repro.data.dmri import synth_cohort
-from repro.serve import LifeService
+from repro.serve import JobFailedError, LifeFrontend
 
 N_ITERS = 30
 N_JOBS = 8
 SLICE = 10
 
 
-def run_trace(cohort, rate_per_s: float, plan_dir: str, seed: int = 0):
-    """Open-loop arrival trace: submit job i at its pre-drawn arrival time
-    regardless of service progress; tick the scheduler in between.
+def _frontend(plan_dir: str, **kw) -> LifeFrontend:
+    return LifeFrontend(LifeConfig(executor="opt", n_iters=N_ITERS,
+                                   plan_cache_dir=plan_dir),
+                        slice_iters=SLICE, **kw)
 
-    Returns (service, wall_seconds); completion counts and latencies are
+
+def run_async_trace(cohort, rate_per_s: float, plan_dir: str, seed: int = 0):
+    """Open-loop arrival trace through ``submit_async``: the producer
+    sleeps to each pre-drawn arrival time and submits; the frontend's
+    driver thread micro-batches and time-slices concurrently.
+
+    Returns (frontend, wall_seconds); completion counts and latencies are
     read from the obs registry, which the scheduler and service populate.
     """
     rng = np.random.default_rng(seed)
@@ -58,22 +80,60 @@ def run_trace(cohort, rate_per_s: float, plan_dir: str, seed: int = 0):
     specs = [("sell" if i % 3 == 2 else "auto", 5 if i % 4 == 0 else 0)
              for i in range(len(cohort))]
 
-    svc = LifeService(LifeConfig(executor="opt", n_iters=N_ITERS,
-                                 plan_cache_dir=plan_dir), slice_iters=SLICE)
+    fe = _frontend(plan_dir, max_queue=len(cohort), backpressure="block")
+    handles = []
     t0 = time.perf_counter()
-    submitted = 0
-    while submitted < len(cohort) or svc.scheduler.active():
+    for i, problem in enumerate(cohort):
         now = time.perf_counter() - t0
-        while submitted < len(cohort) and arrivals[submitted] <= now:
-            fmt, pri = specs[submitted]
-            svc.submit(cohort[submitted], job_id=f"s{submitted}",
-                       n_iters=N_ITERS, format=fmt, priority=pri)
-            submitted += 1
-        if svc.scheduler.active():
-            svc.step()
-        elif submitted < len(cohort):
-            time.sleep(max(0.0, min(0.001, arrivals[submitted] - now)))
-    return svc, time.perf_counter() - t0
+        if arrivals[i] > now:
+            time.sleep(arrivals[i] - now)
+        fmt, pri = specs[i]
+        handles.append(fe.submit_async(problem, job_id=f"s{i}",
+                                       n_iters=N_ITERS, format=fmt,
+                                       priority=pri, timeout=600))
+    for h in handles:
+        h.result(timeout=600)
+    wall = time.perf_counter() - t0
+    fe.shutdown()
+    return fe, wall
+
+
+def failure_isolation_scenario(cohort, plan_dir: str) -> None:
+    """One always-raising tenant + a saturated two-slot admission queue:
+    the §13.3 acceptance scenario at benchmark scale.  Every healthy job
+    completes through ``submit_async`` (no wedge), the poisoned job's
+    exception surfaces on its handle, and the extended counter algebra
+    settles exactly."""
+    obs.reset()
+    bad_problem = dataclasses.replace(cohort[0],
+                                      b=np.asarray(cohort[0].b)[:-3])
+    fe = _frontend(plan_dir, max_queue=2, backpressure="block")
+    t0 = time.perf_counter()
+    bad = fe.submit_async(bad_problem, job_id="bad", n_iters=N_ITERS,
+                          format="auto", timeout=600)
+    handles = [fe.submit_async(p, job_id=f"h{i}", n_iters=N_ITERS,
+                               format="auto", timeout=600)
+               for i, p in enumerate(cohort)]
+    for h in handles:
+        h.result(timeout=600)
+    err = bad.exception(timeout=600)
+    assert isinstance(err, JobFailedError), \
+        f"poisoned tenant resolved {bad.status()!r}, expected failed"
+    wall = time.perf_counter() - t0
+    fe.shutdown()
+    admitted = obs.value("serve.jobs.admitted")
+    completed = obs.value("serve.jobs.completed")
+    failed = obs.value("serve.jobs.failed")
+    assert (admitted, completed, failed) == (len(cohort) + 1.0,
+                                             float(len(cohort)), 1.0), \
+        (f"counter algebra broke: admitted={admitted} "
+         f"completed={completed} failed={failed}")
+    emit("table13.service.failure_isolation",
+         1e6 * wall / len(cohort),
+         f"{len(cohort)}ok;1failed;queue<=2",
+         healthy_completed=completed, failed=failed,
+         admission_shed=obs.value("serve.admission.shed"),
+         admission_rejected=obs.value("serve.admission.rejected"))
 
 
 def run():
@@ -83,10 +143,14 @@ def run():
     obs.enable()
     try:
         with tempfile.TemporaryDirectory() as plan_dir:
+            # the wedge-on-error regression gate runs first; the benign
+            # rates below reset the registry, so the snapshot CI gates
+            # ends with serve.jobs.failed == 0
+            failure_isolation_scenario(cohort, plan_dir)
             for rate in (2.0, 8.0, 32.0):
                 obs.reset()
-                svc, wall = run_trace(cohort, rate, plan_dir)
-                svc.metrics_snapshot()        # mirrors cache stats to gauges
+                fe, wall = run_async_trace(cohort, rate, plan_dir)
+                fe.service.metrics_snapshot()  # mirrors cache stats to gauges
                 lat = obs.histogram("serve.job.latency.seconds")
                 depth = obs.histogram("serve.queue.depth")
                 completed = obs.value("serve.jobs.completed")
@@ -95,6 +159,8 @@ def run():
                 p95 = lat.quantile(95.0)
                 assert completed == obs.value("serve.jobs.admitted"), \
                     "trace drained, yet admitted != completed"
+                assert obs.value("serve.jobs.failed") == 0.0, \
+                    "benign trace failed jobs — failure isolation misfired"
                 emit(f"table13.service.rate{rate:g}",
                      1e6 * lat.mean,
                      f"{completed / wall:.2f}subj/s;"

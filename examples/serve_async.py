@@ -1,0 +1,105 @@
+"""Async serving front line — handles, streamed progress, failure isolation.
+
+    PYTHONPATH=src python examples/serve_async.py [n_subjects]
+
+Walks the front-line story (DESIGN.md §13) on top of the multi-tenant
+service from examples/serve_life.py:
+
+  1. ``submit_async`` returns a :class:`JobHandle` immediately; the
+     frontend's background driver thread owns the tick loop and
+     micro-batches compatible tenants while the producer keeps submitting,
+  2. one handle's per-slice progress events are streamed live,
+  3. a poisoned tenant (truncated signal vector) is submitted alongside
+     healthy ones: quarantine bisection fails it alone, every batch-mate
+     completes, and the captured exception is read off the handle,
+  4. a deliberately tiny admission queue shows backpressure: with
+     ``backpressure="shed"`` the lowest-priority pending job is evicted
+     and its handle resolves as ``shed``.
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro import obs
+from repro.core.life import LifeConfig
+from repro.data.dmri import synth_cohort
+from repro.serve import JobFailedError, LifeFrontend
+
+N_ITERS = 40
+
+
+def main():
+    try:
+        n_subjects = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    except ValueError:
+        sys.exit(f"usage: {sys.argv[0]} [n_subjects]")
+
+    obs.enable()
+    print(f"1. synthesizing {n_subjects}-subject cohort...")
+    cohort = synth_cohort(n_subjects, base_seed=0, n_fibers=256, n_theta=64,
+                          n_atoms=64, grid=(14, 14, 14))
+    cfg = LifeConfig(executor="opt", n_iters=N_ITERS,
+                     plan_cache_dir=tempfile.mkdtemp())
+
+    print("2. async submission — handles come back before any solve runs...")
+    with LifeFrontend(cfg, slice_iters=10, max_queue=16) as fe:
+        handles = {}
+        for i, p in enumerate(cohort):
+            handles[f"tenant-{i}"] = fe.submit_async(
+                p, job_id=f"tenant-{i}", n_iters=N_ITERS,
+                priority=5 if i == 1 else 0)
+        # a tenant with a truncated signal vector can never solve: the
+        # batch build fails, quarantine bisection probes each member solo,
+        # and only this one is condemned (DESIGN.md §13.3)
+        bad_problem = dataclasses.replace(
+            cohort[0], b=np.asarray(cohort[0].b)[:-3])
+        bad = fe.submit_async(bad_problem, job_id="poisoned",
+                              n_iters=N_ITERS)
+
+        print("3. streaming tenant-0's per-slice progress...")
+        for ev in handles["tenant-0"].events():
+            if ev["type"] == "progress":
+                print(f"   tenant-0: {ev['done']}/{ev['n_iters']} iters, "
+                      f"loss {ev['loss']:.5f}")
+            else:
+                print(f"   tenant-0: terminal event {ev['type']!r}")
+
+        print("4. collecting results — healthy tenants all complete...")
+        for jid, h in sorted(handles.items()):
+            w, losses = h.result(timeout=600)
+            print(f"   {jid}: status {h.status()!r}, "
+                  f"final loss {losses[-1]:.5f}, "
+                  f"{int((np.asarray(w) > 1e-6).sum())} fibers kept")
+
+        err = bad.exception(timeout=600)
+        assert isinstance(err, JobFailedError)
+        print(f"   poisoned: status {bad.status()!r} — "
+              f"{type(err.error).__name__} captured on the handle, "
+              f"nobody else was harmed")
+
+    admitted = obs.value("serve.jobs.admitted")
+    completed = obs.value("serve.jobs.completed")
+    failed = obs.value("serve.jobs.failed")
+    print(f"   counters: admitted={admitted:g} completed={completed:g} "
+          f"failed={failed:g}")
+
+    print("5. backpressure='shed' on a one-slot queue...")
+    with LifeFrontend(cfg, slice_iters=10, max_queue=1,
+                      backpressure="shed", start=False) as fe:
+        lo = fe.submit_async(cohort[0], job_id="lo", n_iters=4, priority=0)
+        hi = fe.submit_async(cohort[1], job_id="hi", n_iters=4, priority=5)
+        fe.start()
+        hi.result(timeout=600)
+        print(f"   lo: status {lo.status()!r} (evicted by the higher-"
+              f"priority arrival); hi: status {hi.status()!r}")
+
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,7 +54,15 @@ def _path_str(p) -> str:
 
 def save(ckpt_dir: str, step: int, tree: Any,
          meta: Optional[Dict[str, Any]] = None, keep: int = 3) -> str:
-    """Atomic checkpoint write; prunes to the most recent `keep` steps."""
+    """Atomic checkpoint write; prunes to the most recent `keep` steps.
+
+    Overwrite-safe: saving a step that already exists (e.g. the service's
+    final checkpoint landing on the same tick a periodic checkpoint just
+    wrote) *replaces* it without ever destroying the old snapshot before
+    the new one is in place — the existing directory is renamed aside to
+    ``.old``, the fresh one renamed in, then the old removed.  A crash
+    anywhere in that window leaves a complete snapshot on disk (the
+    ``.old``/``.tmp`` suffixes are invisible to `all_steps`/`restore`)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -71,9 +79,13 @@ def save(ckpt_dir: str, step: int, tree: Any,
         json.dump(manifest, f, indent=2)
         f.flush()
         os.fsync(f.fileno())
+    old = final + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
     if os.path.exists(final):
-        shutil.rmtree(final)
+        os.rename(final, old)
     os.rename(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
     _prune(ckpt_dir, keep)
     return final
 
@@ -86,12 +98,15 @@ def _prune(ckpt_dir: str, keep: int) -> None:
 
 
 def all_steps(ckpt_dir: str):
+    """Completed checkpoint steps only — in-flight ``.tmp`` and
+    replaced-but-not-yet-removed ``.old`` directories are not steps."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            out.append(int(name.split("_")[1]))
+        suffix = name[len("step_"):]
+        if name.startswith("step_") and suffix.isdigit():
+            out.append(int(suffix))
     return sorted(out)
 
 

@@ -1,14 +1,24 @@
-"""Multi-tenant LiFE serving subsystem (DESIGN.md §8).
+"""Multi-tenant LiFE serving subsystem (DESIGN.md §8, §13).
 
 Turns the three engines and two caches of the preceding layers into a
 service: jobs arrive continuously, compatible subjects are micro-batched
 through :class:`~repro.core.batched.BatchedLifeEngine`, long solves are
 time-sliced fairly across tenants through the stepped SBBNNLS API, and every
 in-flight solver state survives a kill via :mod:`repro.checkpoint.manager`.
+
+:class:`~repro.serve.frontend.LifeFrontend` is the traffic-facing front
+line: async submission (``submit_async`` → :class:`JobHandle`), a bounded
+admission queue with configurable backpressure, per-job failure isolation
+(one bad tenant fails alone, batch-mates keep running), and graceful
+drain-and-checkpoint shutdown.
 """
-from repro.serve.scheduler import (BATCHABLE_FORMATS, Job, Scheduler,
-                                   dataset_key)
+from repro.serve.frontend import (BACKPRESSURE_POLICIES, AdmissionQueueFull,
+                                  JobHandle, LifeFrontend, ShutdownError)
+from repro.serve.scheduler import (BATCHABLE_FORMATS, Job, JobCancelledError,
+                                   JobFailedError, Scheduler, dataset_key)
 from repro.serve.service import LifeService
 
-__all__ = ["BATCHABLE_FORMATS", "Job", "LifeService", "Scheduler",
-           "dataset_key"]
+__all__ = ["AdmissionQueueFull", "BACKPRESSURE_POLICIES",
+           "BATCHABLE_FORMATS", "Job", "JobCancelledError", "JobFailedError",
+           "JobHandle", "LifeFrontend", "LifeService", "Scheduler",
+           "ShutdownError", "dataset_key"]

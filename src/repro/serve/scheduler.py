@@ -95,6 +95,30 @@ BATCHABLE_FORMATS = ("auto", "coo", "alto")
 
 _SOLO_FORMATS = ("sell", "fcoo")
 
+#: statuses a job never leaves (failure isolation, DESIGN.md §13.3)
+TERMINAL_STATUSES = ("done", "failed", "cancelled")
+
+
+class JobFailedError(RuntimeError):
+    """Raised when a result is read off a job whose solve failed.
+
+    The executor's original exception is both chained (``__cause__``) and
+    carried on ``.error`` so clients on the async front line can retrieve
+    it from the handle without parsing the message."""
+
+    def __init__(self, job_id: str, error: BaseException):
+        super().__init__(f"job {job_id!r} failed: {error!r}")
+        self.job_id = job_id
+        self.error = error
+
+
+class JobCancelledError(RuntimeError):
+    """Raised when a result is read off a cancelled job."""
+
+    def __init__(self, job_id: str):
+        super().__init__(f"job {job_id!r} was cancelled")
+        self.job_id = job_id
+
 
 def _is_solo(fmt: str, mesh: Optional[Tuple[int, int]]) -> bool:
     """Solo-bucket predicate: SELL operands cannot stack under vmap, and a
@@ -145,15 +169,21 @@ class Job:
     # differently never share a micro-batch (DESIGN.md §10.4)
     tune: Optional[str] = None            # "off" | "cached" | "full"
     compute_dtype: Optional[str] = None   # "fp32" | "bf16" | "auto"
-    submitted_at: float = 0.0
+    # None = unset (stamped at submit); 0.0 is a legitimate monotonic time
+    submitted_at: Optional[float] = None
     # -- progress (owned by the scheduler) --------------------------------
     state: Optional[SbbnnlsState] = None
     done: int = 0                         # iterations completed
     losses: List[np.ndarray] = dataclasses.field(default_factory=list)
-    status: str = "queued"                # queued | running | done
+    status: str = "queued"    # queued | running | done | failed | cancelled
     dataset: str = ""                     # content digest, set on submit
     dict_digest: str = ""                 # dictionary digest (bucket key part)
     finished_at: Optional[float] = None
+    # seconds spent in previous service incarnations (restored on resume);
+    # end-to-end latency = prior_elapsed + (finished_at - submitted_at)
+    prior_elapsed: float = 0.0
+    # the exception that failed this job (status == "failed")
+    error: Optional[BaseException] = None
 
     @property
     def remaining(self) -> int:
@@ -161,6 +191,11 @@ class Job:
 
     def result(self) -> Tuple[jnp.ndarray, np.ndarray]:
         """(final weights (Nf,), per-iteration loss trace)."""
+        if self.status == "failed":
+            assert self.error is not None
+            raise JobFailedError(self.job_id, self.error) from self.error
+        if self.status == "cancelled":
+            raise JobCancelledError(self.job_id)
         if self.state is None:
             raise RuntimeError(f"job {self.job_id!r} has not run yet")
         losses = (np.concatenate(self.losses) if self.losses
@@ -296,11 +331,14 @@ class Scheduler:
         self._last_served: Optional[Tuple] = None
         # obs instruments, fetched once and held (DESIGN.md §12.2) — every
         # call below is an allocation-free no-op while obs is disabled.
-        # Counter invariant, maintained across submit()/tick():
-        #   serve.jobs.admitted == serve.jobs.completed
+        # Counter invariant, maintained across submit()/tick()/cancel():
+        #   serve.jobs.admitted == serve.jobs.completed + serve.jobs.failed
+        #                          + serve.jobs.cancelled
         #                          + serve.queue.depth + serve.jobs.running
         self._m_admitted = obs.counter("serve.jobs.admitted")
         self._m_completed = obs.counter("serve.jobs.completed")
+        self._m_failed = obs.counter("serve.jobs.failed")
+        self._m_cancelled = obs.counter("serve.jobs.cancelled")
         self._m_preempted = obs.counter("serve.preemptions")
         self._g_queue = obs.gauge("serve.queue.depth")
         self._g_running = obs.gauge("serve.jobs.running")
@@ -352,7 +390,7 @@ class Scheduler:
             job.dataset = dataset_key(job.problem)
         if not job.dict_digest:
             job.dict_digest = _dict_digest(job.problem)
-        if not job.submitted_at:
+        if job.submitted_at is None:      # 0.0 is a valid monotonic stamp
             job.submitted_at = time.monotonic()
         self._jobs[job.job_id] = job
         self._queue.append(job)
@@ -386,7 +424,13 @@ class Scheduler:
     def tick(self) -> List[Job]:
         """Admit arrivals, serve the most urgent bucket one time slice.
 
-        Returns the jobs that completed during this tick."""
+        Returns the jobs that reached a terminal state during this tick
+        (``status`` is "done" or "failed").  An executor exception never
+        propagates: the poisoned bucket is quarantined — each member is
+        retried in a single-job probe so one bad tenant cannot condemn its
+        batch-mates — and only the jobs that fail alone are marked
+        ``failed`` with the exception captured (DESIGN.md §13.3).  Every
+        other bucket stays servable."""
         with obs.span("scheduler.tick"):
             self._h_queue.observe(float(len(self._queue)))
             self._admit()
@@ -407,19 +451,100 @@ class Scheduler:
             self._h_occupancy.observe(float(len(bucket.jobs)))
             timed = obs.SWITCH.on          # guard the clock reads, not just
             t0 = time.monotonic() if timed else 0.0   # the observe() call
-            with obs.span("scheduler.slice",
-                          {"format": bucket.format,
-                           "jobs": len(bucket.jobs)}):
-                finished = bucket.run_slice(self.config, self.cache,
-                                            self.slice_iters)
+            try:
+                with obs.span("scheduler.slice",
+                              {"format": bucket.format,
+                               "jobs": len(bucket.jobs)}):
+                    finished = bucket.run_slice(self.config, self.cache,
+                                                self.slice_iters)
+            except Exception as exc:
+                finished = self._quarantine(bucket, exc)
             if timed:
                 self._h_slice.observe(time.monotonic() - t0)
+            done = [j for j in finished if j.status == "done"]
+            if done:
+                self._m_completed.inc(float(len(done)))
             if finished:
-                self._m_completed.inc(float(len(finished)))
                 self._g_running.dec(float(len(finished)))
-            if not bucket.jobs:
+            cur = self._buckets.get(bucket.key)
+            if cur is not None and not cur.jobs:
                 del self._buckets[bucket.key]
             return finished
+
+    # -- failure isolation (DESIGN.md §13.3) -------------------------------
+    def _fail(self, job: Job, exc: BaseException) -> None:
+        job.status = "failed"
+        job.error = exc
+        job.finished_at = time.monotonic()
+        self._m_failed.inc()
+
+    def _quarantine(self, bucket: _Bucket, exc: Exception) -> List[Job]:
+        """A slice raised: evict the poisoned bucket and bisect to the bad
+        tenant(s).  Single-member buckets fail outright; multi-member
+        buckets retry each job through a one-job probe bucket of the same
+        compatibility class — members that succeed alone keep their
+        advanced state and re-bucket together (micro-batching resumes next
+        tick), members that fail alone are the poisoned ones.  Returns the
+        jobs that reached a terminal state (failed, plus any that finished
+        during their probe)."""
+        jobs = list(bucket.jobs)
+        self._buckets.pop(bucket.key, None)
+        if len(jobs) == 1:
+            self._fail(jobs[0], exc)
+            return jobs
+        terminal: List[Job] = []
+        survivors: List[Job] = []
+        with obs.span("scheduler.quarantine",
+                      {"format": bucket.format, "jobs": len(jobs)}):
+            for job in jobs:
+                probe = _Bucket(bucket.key, bucket.format, bucket.arrival,
+                                mesh=bucket.mesh, tune=bucket.tune,
+                                compute_dtype=bucket.compute_dtype)
+                probe.jobs = [job]
+                try:
+                    terminal.extend(probe.run_slice(self.config, self.cache,
+                                                    self.slice_iters))
+                except Exception as probe_exc:
+                    self._fail(job, probe_exc)
+                    terminal.append(job)
+                else:
+                    if job.remaining > 0:
+                        survivors.append(job)
+        if survivors:
+            fresh = _Bucket(bucket.key, bucket.format,
+                            next(self._arrivals), mesh=bucket.mesh,
+                            tune=bucket.tune,
+                            compute_dtype=bucket.compute_dtype)
+            fresh.iters_served = bucket.iters_served   # fairness carries over
+            fresh.jobs = survivors
+            self._buckets[bucket.key] = fresh
+        return terminal
+
+    # -- cancellation ------------------------------------------------------
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a queued or running job; returns False when the job is
+        already terminal.  A running job leaves its bucket immediately (the
+        engine signature invalidates, so batch-mates re-batch without it);
+        its partial state stays readable on the Job for post-mortems but
+        ``result()`` raises :class:`JobCancelledError`."""
+        job = self._jobs[job_id]
+        if job.status in TERMINAL_STATUSES:
+            return False
+        if job in self._queue:
+            self._queue.remove(job)
+            self._g_queue.set(float(len(self._queue)))
+        else:
+            bucket = next((b for b in self._buckets.values()
+                           if job in b.jobs), None)
+            if bucket is not None:
+                bucket.jobs.remove(job)
+                if not bucket.jobs:
+                    del self._buckets[bucket.key]
+                self._g_running.dec()
+        job.status = "cancelled"
+        job.finished_at = time.monotonic()
+        self._m_cancelled.inc()
+        return True
 
     def active(self) -> bool:
         return bool(self._queue) or any(b.jobs
@@ -444,5 +569,6 @@ class Scheduler:
         return list(self._jobs.values())
 
     def in_flight(self) -> List[Job]:
-        """Jobs admitted or queued but not finished (checkpoint targets)."""
-        return [j for j in self._jobs.values() if j.status != "done"]
+        """Jobs admitted or queued but not terminal (checkpoint targets)."""
+        return [j for j in self._jobs.values()
+                if j.status not in TERMINAL_STATUSES]

@@ -53,6 +53,7 @@ class LifeService:
         self.keep = keep
         self._tick = 0
         self._completed: Dict[str, Job] = {}
+        self._failed: Dict[str, Job] = {}
         # job_id -> (restored arrays, manifest meta) awaiting resubmission
         self._resumable: Dict[str, Tuple[dict, dict]] = {}
         # obs instruments (no-ops while disabled, DESIGN.md §12.2)
@@ -165,6 +166,9 @@ class LifeService:
                                      it=jnp.asarray(arrays["it"]),
                                      loss=jnp.asarray(arrays["loss"]))
             job.done = int(meta["done"])
+            # the resume leg restarts submitted_at; the time the job spent
+            # in earlier incarnations is restored so latency is end-to-end
+            job.prior_elapsed = float(meta.get("elapsed", 0.0) or 0.0)
             # explicit caller arguments win over checkpointed values
             if n_iters is None:
                 job.n_iters = int(meta.get("n_iters", job.n_iters))
@@ -181,13 +185,21 @@ class LifeService:
 
     # -- driving -----------------------------------------------------------
     def step(self) -> List[Job]:
-        """One scheduler tick + periodic checkpoint; returns completions."""
+        """One scheduler tick + periodic checkpoint; returns the jobs that
+        reached a terminal state (done or failed) this tick."""
         finished = self.scheduler.tick()
         self._tick += 1
         for job in finished:
+            if job.status == "failed":
+                self._failed[job.job_id] = job
+                continue
             self._completed[job.job_id] = job
             if job.finished_at is not None:
-                self._h_latency.observe(job.finished_at - job.submitted_at)
+                # end-to-end latency: legs run before a kill-and-resume are
+                # restored into prior_elapsed, so a resumed job reports its
+                # true submit→finish time, not just the final leg
+                self._h_latency.observe(job.prior_elapsed
+                                        + job.finished_at - job.submitted_at)
         if (self.ckpt_dir and self.checkpoint_every > 0
                 and self._tick % self.checkpoint_every == 0):
             self.checkpoint()
@@ -223,8 +235,12 @@ class LifeService:
         tree: Dict[str, Dict[str, np.ndarray]] = {}
         meta: Dict[str, dict] = {}
         now = time.monotonic()
+        # failed jobs ride along with their last good state: resubmitting a
+        # failed job's data re-adopts it and retries the remaining
+        # iterations from where the solve was last healthy (DESIGN.md §13.3)
         for job in (self.scheduler.in_flight()
-                    + list(self._completed.values())):
+                    + list(self._completed.values())
+                    + list(self._failed.values())):
             if job.state is None:
                 continue                      # queued, never ran: nothing yet
             entry = {"w": np.asarray(job.state.w),
@@ -233,15 +249,22 @@ class LifeService:
             if job.losses:
                 entry["losses"] = np.concatenate(job.losses)
             tree[job.job_id] = entry
+            end = job.finished_at if job.finished_at is not None else now
             meta[job.job_id] = dict(
                 done=job.done, n_iters=job.n_iters, priority=job.priority,
                 format=job.format, dataset=job.dataset,
                 mesh=None if job.mesh is None else list(job.mesh),
                 tune=job.tune, compute_dtype=job.compute_dtype,
+                # cumulative wall time across service incarnations, so a
+                # resumed job's latency covers every leg (restored into
+                # Job.prior_elapsed on resume)
+                elapsed=job.prior_elapsed + max(0.0, end - job.submitted_at),
                 # deadlines are monotonic-clock absolutes that don't survive
                 # a restart; persist the remaining budget instead
                 deadline_remaining=(None if job.deadline is None
                                     else job.deadline - now))
+            if job.status == "failed" and job.error is not None:
+                meta[job.job_id]["error"] = repr(job.error)
         # carry restored-but-unclaimed states forward: without this, a job
         # nobody has resubmitted yet would fall out of retention once other
         # jobs rotate `keep` fresh snapshots past its last one.  Deliberate
@@ -258,15 +281,37 @@ class LifeService:
                          meta={"jobs": meta}, keep=self.keep)
 
     # -- introspection -----------------------------------------------------
-    def result(self, job_id: str) -> Tuple[jnp.ndarray, np.ndarray]:
+    def job(self, job_id: str) -> Job:
+        """The Job record whatever its state — queued, running, done,
+        failed, or cancelled (the front line's status/result source)."""
         if job_id in self._completed:
-            return self._completed[job_id].result()
-        return self.scheduler.job(job_id).result()
+            return self._completed[job_id]
+        if job_id in self._failed:
+            return self._failed[job_id]
+        return self.scheduler.job(job_id)
+
+    def result(self, job_id: str) -> Tuple[jnp.ndarray, np.ndarray]:
+        """(weights, loss trace); raises
+        :class:`~repro.serve.scheduler.JobFailedError` (chaining the
+        captured executor exception) when the job failed."""
+        return self.job(job_id).result()
 
     def status(self, job_id: str) -> str:
-        if job_id in self._completed:
-            return "done"
-        return self.scheduler.job(job_id).status
+        return self.job(job_id).status
+
+    def error(self, job_id: str) -> Optional[BaseException]:
+        """The captured exception of a failed job (None otherwise)."""
+        return self.job(job_id).error
+
+    @property
+    def failed_jobs(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._failed))
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a queued or running job; False once it is terminal."""
+        if job_id in self._completed or job_id in self._failed:
+            return False
+        return self.scheduler.cancel(job_id)
 
     @property
     def cache_stats(self):

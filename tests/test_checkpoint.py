@@ -40,6 +40,51 @@ def test_no_tmp_dirs_left(tmp_path, rng):
     assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
 
 
+def test_same_step_save_replaces_atomically(tmp_path, rng):
+    """Saving a step that already exists replaces it (the service's final
+    checkpoint can land on the same tick a periodic one just wrote) and
+    leaves no .tmp/.old debris or phantom steps behind."""
+    tree = _tree(rng)
+    CK.save(str(tmp_path), 3, tree, meta={"gen": 1})
+    CK.save(str(tmp_path), 3, tree, meta={"gen": 2})
+    step, _, manifest = CK.restore(str(tmp_path))
+    assert (step, manifest["gen"]) == (3, 2)
+    assert CK.all_steps(str(tmp_path)) == [3]
+    assert not [d for d in os.listdir(tmp_path)
+                if d.endswith((".tmp", ".old"))]
+
+
+def test_all_steps_ignores_swap_debris(tmp_path, rng):
+    """A crash mid-replace can leave step_N.old behind; it must not be
+    listed as a step (int() would choke on the suffix) and the next save
+    must clear it."""
+    CK.save(str(tmp_path), 2, _tree(rng))
+    os.makedirs(tmp_path / "step_0000000002.old")
+    os.makedirs(tmp_path / "step_0000000002.tmp")
+    assert CK.all_steps(str(tmp_path)) == [2]
+    assert CK.latest_step(str(tmp_path)) == 2
+    CK.save(str(tmp_path), 2, _tree(rng))
+    assert not [d for d in os.listdir(tmp_path)
+                if d.endswith((".tmp", ".old"))]
+
+
+def test_service_final_checkpoint_on_periodic_tick(tmp_path, tiny_problem):
+    """Regression: LifeService.run() final-checkpoints at the same tick a
+    checkpoint_every=1 periodic checkpoint just wrote — the double save of
+    one step must replace, not crash."""
+    from repro.core.life import LifeConfig
+    from repro.serve import LifeService
+
+    svc = LifeService(LifeConfig(executor="opt", n_iters=8,
+                                 plan_cache_dir=""),
+                      ckpt_dir=str(tmp_path / "svc"), checkpoint_every=1,
+                      slice_iters=4)
+    svc.submit(tiny_problem, job_id="t", n_iters=8, format="coo")
+    results = svc.run()
+    assert set(results) == {"t"}
+    assert CK.latest_step(str(tmp_path / "svc")) is not None
+
+
 def test_shape_mismatch_detected(tmp_path, rng):
     CK.save(str(tmp_path), 1, _tree(rng))
     _, flat, _ = CK.restore(str(tmp_path))

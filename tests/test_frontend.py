@@ -1,0 +1,319 @@
+"""Async front line: handles, streaming, backpressure, failure isolation.
+
+Covers the DESIGN.md §13 contracts end to end: ``submit_async`` results
+match the synchronous service bit-for-bit, progress streams through the
+handle, each backpressure policy does what it says at the bound, a
+poisoned tenant plus a saturated admission queue never wedges the healthy
+jobs, and the scheduler's extended counter algebra holds in the final
+snapshot.
+"""
+import dataclasses
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.life import LifeConfig
+from repro.serve import (AdmissionQueueFull, JobCancelledError,
+                         JobFailedError, LifeFrontend, LifeService,
+                         ShutdownError)
+
+TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
+def _cfg(**kw):
+    kw.setdefault("executor", "opt")
+    kw.setdefault("n_iters", 12)
+    kw.setdefault("plan_cache_dir", "")
+    return LifeConfig(**kw)
+
+
+def _poison(problem):
+    """Geometry-preserving corruption: a truncated signal keeps the bucket
+    key (which has no ``b`` component) so the job lands in the same
+    micro-batch as healthy same-acquisition tenants — and fails there."""
+    return dataclasses.replace(problem, b=np.asarray(problem.b)[:-3])
+
+
+# ----------------------------------------------------------------------------
+# async results == sync results
+# ----------------------------------------------------------------------------
+
+def test_submit_async_matches_sync_service(tiny_cohort):
+    """The frontend is a transport, not a solver: handles resolve to the
+    exact arrays the synchronous service produces for the same batch."""
+    ref = LifeService(_cfg(), slice_iters=5)
+    ids = [ref.submit(p, n_iters=12, format="coo") for p in tiny_cohort]
+    expected = ref.run()
+
+    fe = LifeFrontend(_cfg(), slice_iters=5, start=False)
+    handles = [fe.submit_async(p, n_iters=12, format="coo")
+               for p in tiny_cohort]                # all admitted together
+    with fe:
+        for h, jid in zip(handles, ids):
+            w, losses = h.result(timeout=300)
+            w_ref, l_ref = expected[jid]
+            np.testing.assert_array_equal(np.asarray(w), np.asarray(w_ref))
+            np.testing.assert_array_equal(losses, l_ref)
+            assert h.done() and h.status() == "done"
+
+
+def test_events_stream_per_slice_progress(tiny_problem):
+    fe = LifeFrontend(_cfg(), slice_iters=4, start=False)
+    h = fe.submit_async(tiny_problem, n_iters=12, format="coo")
+    with fe:
+        events = list(h.events(timeout=300))
+    assert events[-1] == {"type": "done"}
+    progress = events[:-1]
+    assert progress and all(e["type"] == "progress" for e in progress)
+    done = [e["done"] for e in progress]
+    assert done == sorted(done) and done[-1] == 12
+    assert all(e["n_iters"] == 12 for e in progress)
+    assert all(np.isfinite(e["loss"]) for e in progress)
+
+
+def test_validation_error_resolves_handle_not_raises(tiny_problem):
+    """Admission-time validation failures are per-job outcomes, not
+    exceptions on the submitting thread — admission keeps flowing."""
+    with LifeFrontend(_cfg(), slice_iters=4) as fe:
+        good = fe.submit_async(tiny_problem, n_iters=4, format="coo")
+        bad = fe.submit_async(tiny_problem, n_iters=4, format="csr")
+        assert isinstance(bad.exception(timeout=60), ValueError)
+        assert bad.status() == "rejected"
+        with pytest.raises(JobFailedError):
+            bad.result(timeout=60)
+        w, losses = good.result(timeout=300)
+        assert losses.shape == (4,)
+
+
+# ----------------------------------------------------------------------------
+# backpressure policies at the admission bound
+# ----------------------------------------------------------------------------
+
+def test_backpressure_reject_raises_at_bound(tiny_cohort):
+    obs.enable()
+    fe = LifeFrontend(_cfg(), slice_iters=8, max_queue=2,
+                      backpressure="reject", start=False)
+    a = fe.submit_async(tiny_cohort[0], n_iters=4, format="coo")
+    b = fe.submit_async(tiny_cohort[1], n_iters=4, format="coo")
+    with pytest.raises(AdmissionQueueFull):
+        fe.submit_async(tiny_cohort[2], n_iters=4, format="coo")
+    assert obs.value("serve.admission.rejected") == 1.0
+    with fe:                                        # drain the admitted two
+        pass
+    assert a.status() == "done" and b.status() == "done"
+    assert obs.value("serve.jobs.completed") == 2.0
+
+
+def test_backpressure_shed_evicts_lowest_priority(tiny_cohort):
+    obs.enable()
+    fe = LifeFrontend(_cfg(), slice_iters=8, max_queue=2,
+                      backpressure="shed", start=False)
+    lo = fe.submit_async(tiny_cohort[0], n_iters=4, priority=0, format="coo")
+    mid = fe.submit_async(tiny_cohort[1], n_iters=4, priority=3, format="coo")
+    hi = fe.submit_async(tiny_cohort[2], n_iters=4, priority=5, format="coo")
+    assert lo.done() and lo.status() == "shed"
+    with pytest.raises(AdmissionQueueFull):
+        lo.result()
+    # a newcomer that is itself the lowest priority sheds itself — resolved
+    # on the handle, never raised at the producer
+    newcomer = fe.submit_async(tiny_cohort[0], n_iters=4, priority=1,
+                               format="coo")
+    assert newcomer.status() == "shed"
+    assert obs.value("serve.admission.shed") == 2.0
+    with fe:
+        pass
+    assert mid.status() == "done" and hi.status() == "done"
+
+
+def test_backpressure_block_times_out_without_driver(tiny_cohort):
+    fe = LifeFrontend(_cfg(), slice_iters=8, max_queue=1,
+                      backpressure="block", start=False)
+    first = fe.submit_async(tiny_cohort[0], n_iters=4, format="coo")
+    with pytest.raises(AdmissionQueueFull):
+        fe.submit_async(tiny_cohort[1], n_iters=4, format="coo",
+                        timeout=0.05)
+    with fe:
+        first.result(timeout=300)
+
+
+def test_backpressure_block_waits_for_space(tiny_cohort):
+    """With the driver live, producers that outpace it block at the bound
+    and every submission still completes."""
+    with LifeFrontend(_cfg(), slice_iters=8, max_queue=1) as fe:
+        handles = [fe.submit_async(p, n_iters=4, format="coo", timeout=120)
+                   for p in tiny_cohort]
+        for h in handles:
+            w, losses = h.result(timeout=300)
+            assert losses.shape == (4,)
+
+
+def test_blocked_submitter_released_on_shutdown(tiny_cohort):
+    fe = LifeFrontend(_cfg(), max_queue=1, backpressure="block", start=False)
+    fe.submit_async(tiny_cohort[0], n_iters=4, format="coo")
+    errs = []
+
+    def blocked():
+        try:
+            fe.submit_async(tiny_cohort[1], n_iters=4, format="coo")
+        except Exception as exc:
+            errs.append(exc)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    time.sleep(0.05)                    # let it reach the wait (either side
+    fe.shutdown()                       # of the race raises RuntimeError)
+    t.join(30)
+    assert not t.is_alive()
+    assert len(errs) == 1 and isinstance(errs[0], RuntimeError)
+
+
+# ----------------------------------------------------------------------------
+# cancellation
+# ----------------------------------------------------------------------------
+
+def test_cancel_pending_and_running(tiny_cohort):
+    fe = LifeFrontend(_cfg(), slice_iters=2, start=False)
+    running = fe.submit_async(tiny_cohort[0], n_iters=200, format="coo")
+    pending = fe.submit_async(tiny_cohort[1], n_iters=200, format="sell")
+    assert pending.cancel()             # never reached the service
+    assert pending.status() == "cancelled"
+    with pytest.raises(JobCancelledError):
+        pending.result()
+    with fe:
+        assert running.cancel()
+        with pytest.raises(JobCancelledError):
+            running.result(timeout=300)
+    assert running.status() == "cancelled"
+    assert not running.cancel()         # terminal: nothing to cancel
+
+
+# ----------------------------------------------------------------------------
+# the ISSUE acceptance scenario: poisoned tenant + saturated queue
+# ----------------------------------------------------------------------------
+
+def test_acceptance_poisoned_tenant_full_queue_no_wedge(tiny_cohort):
+    """One always-raising tenant and a full admission queue: every healthy
+    job completes through ``submit_async`` (no wedge, bound respected), the
+    failed job's exception surfaces on its handle, and the extended counter
+    algebra holds in the obs snapshot."""
+    from repro.obs import snapshot_value
+
+    obs.enable()
+    fe = LifeFrontend(_cfg(), slice_iters=3, max_queue=2,
+                      backpressure="block")
+    bad = fe.submit_async(_poison(tiny_cohort[0]), job_id="bad", n_iters=6,
+                          format="coo", timeout=120)
+    fmts = ["coo", "sell", "fcoo"]
+    healthy = [fe.submit_async(tiny_cohort[i % len(tiny_cohort)],
+                               job_id=f"h{i}", n_iters=6,
+                               format=fmts[i % len(fmts)], timeout=120)
+               for i in range(6)]
+    for h in healthy:
+        w, losses = h.result(timeout=600)
+        assert losses.shape == (6,) and h.status() == "done"
+    err = bad.exception(timeout=600)
+    assert isinstance(err, JobFailedError) and err.job_id == "bad"
+    assert isinstance(err.error, Exception)      # the executor's exception
+    with pytest.raises(JobFailedError):
+        bad.result()
+    fe.shutdown()
+
+    snap = fe.service.metrics_snapshot()
+    admitted = snapshot_value(snap, "counters", "serve.jobs.admitted")
+    completed = snapshot_value(snap, "counters", "serve.jobs.completed")
+    failed = snapshot_value(snap, "counters", "serve.jobs.failed")
+    cancelled = snapshot_value(snap, "counters", "serve.jobs.cancelled")
+    queued = snapshot_value(snap, "gauges", "serve.queue.depth")
+    running = snapshot_value(snap, "gauges", "serve.jobs.running")
+    assert (admitted, failed) == (7.0, 1.0)
+    assert admitted == completed + failed + cancelled + queued + running
+    assert snapshot_value(snap, "gauges", "serve.admission.depth") == 0.0
+
+
+def test_async_stress_randomized_interleavings(tiny_cohort):
+    """Concurrent producers racing a bounded queue, poisoned tenants mixed
+    in: every handle reaches a terminal state, only poisoned jobs fail, and
+    the counter algebra settles exactly."""
+    obs.enable()
+    rng = np.random.default_rng(200 + TEST_SEED)
+    specs = []
+    for i in range(9):
+        poisoned = i in (2, 5)
+        p = tiny_cohort[int(rng.integers(len(tiny_cohort)))]
+        specs.append((f"s{i}", _poison(p) if poisoned else p, poisoned,
+                      int(rng.integers(3, 9)),
+                      ["coo", "auto", "sell"][int(rng.integers(3))],
+                      int(rng.integers(0, 3))))
+    fe = LifeFrontend(_cfg(), slice_iters=3, max_queue=3,
+                      backpressure="block")
+    handles = {}
+
+    def producer(chunk):
+        for jid, p, _, n, fmt, pri in chunk:
+            handles[jid] = fe.submit_async(p, job_id=jid, n_iters=n,
+                                           format=fmt, priority=pri,
+                                           timeout=300)
+
+    threads = [threading.Thread(target=producer, args=(specs[i::3],))
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(300)
+    assert not any(t.is_alive() for t in threads)
+    for jid, _, poisoned, n, _, _ in specs:
+        h = handles[jid]
+        if poisoned:
+            assert isinstance(h.exception(timeout=600), JobFailedError)
+            assert h.status() == "failed"
+        else:
+            w, losses = h.result(timeout=600)
+            assert losses.shape == (n,)
+    fe.shutdown()
+    admitted = obs.value("serve.jobs.admitted")
+    completed = obs.value("serve.jobs.completed")
+    failed = obs.value("serve.jobs.failed")
+    cancelled = obs.value("serve.jobs.cancelled")
+    queued = obs.value("serve.queue.depth")
+    running = obs.value("serve.jobs.running")
+    assert (admitted, failed) == (9.0, 2.0)
+    assert admitted == completed + failed + cancelled + queued + running
+
+
+# ----------------------------------------------------------------------------
+# shutdown semantics
+# ----------------------------------------------------------------------------
+
+def test_shutdown_without_drain_checkpoints_for_resume(tiny_problem,
+                                                       tmp_path):
+    """``shutdown(drain=False)`` stops mid-solve but loses nothing: waiters
+    get ShutdownError instead of hanging, the final checkpoint lands, and a
+    restarted service re-adopts the interrupted job."""
+    ck = str(tmp_path / "svc")
+    fe = LifeFrontend(_cfg(n_iters=64), ckpt_dir=ck, checkpoint_every=0,
+                      slice_iters=2, start=False)
+    orig_step = fe.service.step
+
+    def slow_step():                    # keep the solve running long enough
+        time.sleep(0.05)                # for shutdown to land mid-flight
+        return orig_step()
+
+    fe.service.step = slow_step
+    h = fe.submit_async(tiny_problem, job_id="t", n_iters=64, format="coo")
+    fe.start()
+    assert next(h.events(timeout=300))["type"] == "progress"
+    fe.shutdown(drain=False, timeout=60)
+    assert isinstance(h.exception(), ShutdownError)
+    assert h.status() == "failed"
+
+    svc = LifeService(_cfg(n_iters=64), ckpt_dir=ck)
+    assert svc.resumable_jobs == ("t",)
+    svc.submit(tiny_problem, job_id="t")
+    job = svc.scheduler.job("t")
+    assert 0 < job.done < 64            # adopted mid-flight
+    _, losses = svc.run()["t"]
+    assert losses.shape == (64,)

@@ -325,6 +325,65 @@ def test_scheduler_counters_hold_over_random_traces(tiny_cohort):
         assert obs.histogram("serve.slice.seconds").count > 0
 
 
+def test_extended_counter_algebra_with_failures_and_cancels(tiny_cohort):
+    """The §13 extension of the invariant above, under randomized
+    submit/tick interleavings with poisoned tenants and a cancellation:
+    admitted == completed + failed + cancelled + queued + running."""
+    import dataclasses
+
+    from repro.core.life import LifeConfig
+    from repro.serve import LifeService
+
+    obs.enable()
+    rng = np.random.default_rng(300 + TEST_SEED)
+    svc = LifeService(LifeConfig(executor="opt", n_iters=8,
+                                 plan_cache_dir=""), slice_iters=3)
+    pending = [(tiny_cohort[0], "h0", 40), (tiny_cohort[1], "h1", 6),
+               (tiny_cohort[2], "h2", 6),
+               (dataclasses.replace(tiny_cohort[0],
+                                    b=np.asarray(tiny_cohort[0].b)[:-3]),
+                "p0", 6),
+               (dataclasses.replace(tiny_cohort[1],
+                                    b=np.asarray(tiny_cohort[1].b)[:-3]),
+                "p1", 6)]
+    rng.shuffle(pending)
+
+    def check():
+        admitted = obs.value("serve.jobs.admitted")
+        completed = obs.value("serve.jobs.completed")
+        failed = obs.value("serve.jobs.failed")
+        cancelled = obs.value("serve.jobs.cancelled")
+        queued = obs.value("serve.queue.depth")
+        running = obs.value("serve.jobs.running")
+        assert admitted == (completed + failed + cancelled
+                            + queued + running), (
+            f"admitted={admitted} != completed={completed} + "
+            f"failed={failed} + cancelled={cancelled} + "
+            f"queued={queued} + running={running}")
+
+    submitted = set()
+    cancelled_h0 = False
+    tried_cancel = False
+    steps = 0
+    while pending or svc.scheduler.active():
+        if pending and (not svc.scheduler.active() or rng.random() < 0.5):
+            p, jid, n = pending.pop()
+            svc.submit(p, job_id=jid, n_iters=n, format="coo")
+            submitted.add(jid)
+        else:
+            svc.step()
+            steps += 1
+            if not tried_cancel and steps >= 3 and "h0" in submitted:
+                tried_cancel = True             # mid-flight cancellation
+                cancelled_h0 = svc.cancel("h0")
+                check()
+        check()
+    assert obs.value("serve.jobs.admitted") == 5.0
+    assert obs.value("serve.jobs.failed") == 2.0
+    assert obs.value("serve.jobs.cancelled") == float(cancelled_h0)
+    assert svc.failed_jobs == ("p0", "p1")
+
+
 def test_service_latency_and_snapshot_surface(tiny_cohort):
     """submit->finish latency lands in the histogram and
     metrics_snapshot() mirrors the plan-cache stats into gauges."""

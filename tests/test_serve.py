@@ -1,10 +1,13 @@
 """Serving subsystem: bucketing, continuous batching, fairness, resume."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core.batched import BatchedLifeEngine
 from repro.core.life import LifeConfig, LifeEngine
-from repro.serve import BATCHABLE_FORMATS, LifeService, Scheduler, dataset_key
+from repro.serve import (BATCHABLE_FORMATS, JobFailedError, LifeService,
+                         Scheduler, dataset_key)
 from repro.serve.scheduler import Job
 
 
@@ -13,6 +16,13 @@ def _cfg(**kw):
     kw.setdefault("n_iters", 12)
     kw.setdefault("plan_cache_dir", "")
     return LifeConfig(**kw)
+
+
+def _poison(problem):
+    """Geometry-preserving corruption: a truncated signal keeps the bucket
+    key (which has no ``b`` component) so the poisoned job shares its
+    micro-batch with healthy same-acquisition tenants — and fails there."""
+    return dataclasses.replace(problem, b=np.asarray(problem.b)[:-3])
 
 
 # ----------------------------------------------------------------------------
@@ -139,6 +149,147 @@ def test_rejects_compaction_config():
     skip LifeEngine.run()'s compaction loop — refuse instead."""
     with pytest.raises(ValueError, match="compact"):
         Scheduler(_cfg(compact_every=10))
+
+
+# ----------------------------------------------------------------------------
+# failure isolation (DESIGN.md §13.3): one bad tenant fails alone
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["coo", "sell", "fcoo"])
+def test_poisoned_tenant_fails_alone(fmt, tiny_cohort):
+    """An executor exception condemns only the poisoned job: its status is
+    ``failed`` with the exception retrievable, every other bucket stays
+    servable, and run() still terminates."""
+    svc = LifeService(_cfg(), slice_iters=5)
+    svc.submit(tiny_cohort[0], job_id="good", n_iters=10, format=fmt)
+    svc.submit(_poison(tiny_cohort[0]), job_id="bad", n_iters=10, format=fmt)
+    svc.submit(tiny_cohort[1], job_id="other", n_iters=10, format="coo")
+    results = svc.run()
+    assert set(results) == {"good", "other"}
+    for jid in ("good", "other"):
+        _, losses = results[jid]
+        assert losses.shape == (10,)
+    assert svc.status("bad") == "failed"
+    assert svc.failed_jobs == ("bad",)
+    err = svc.error("bad")
+    assert isinstance(err, Exception)
+    with pytest.raises(JobFailedError) as ei:
+        svc.result("bad")
+    assert ei.value.error is err and ei.value.__cause__ is err
+
+
+def test_quarantine_preserves_survivor_trajectory(tiny_cohort):
+    """Bisection probes advance the healthy batch-mate through the same
+    single-member engine class, so its solution is exactly what it would
+    have been without the poisoned neighbour."""
+    svc = LifeService(_cfg(), slice_iters=5)
+    svc.submit(tiny_cohort[0], job_id="good", n_iters=12, format="coo")
+    svc.submit(_poison(tiny_cohort[1]), job_id="bad", n_iters=12,
+               format="coo")
+    w, losses = svc.run()["good"]
+    W, _ = BatchedLifeEngine([tiny_cohort[0]], _cfg()).run()
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(W[0]))
+    assert losses.shape == (12,)
+    assert svc.failed_jobs == ("bad",)
+
+
+def test_transient_batch_failure_keeps_survivors(tiny_cohort, monkeypatch):
+    """A fault that only bites the stacked batch (both members pass their
+    solo probes) fails nobody: the survivors re-bucket and finish."""
+    svc = LifeService(_cfg(), slice_iters=4)
+    a = svc.submit(tiny_cohort[0], n_iters=8, format="coo")
+    b = svc.submit(tiny_cohort[1], n_iters=8, format="coo")
+    orig = BatchedLifeEngine.step
+    tripped = []
+
+    def flaky(self, states, k):
+        if states.w.shape[0] > 1 and not tripped:
+            tripped.append(True)
+            raise RuntimeError("injected transient fault")
+        return orig(self, states, k)
+
+    monkeypatch.setattr(BatchedLifeEngine, "step", flaky)
+    results = svc.run()
+    assert tripped and set(results) == {a, b}
+    assert svc.failed_jobs == ()
+    for jid in (a, b):
+        assert results[jid][1].shape == (8,)
+
+
+def test_resume_bit_identical_with_poisoned_batchmate(tiny_cohort, tmp_path):
+    """Kill-and-resume stays bit-identical when a failing tenant shared the
+    bucket, and the failure (with its error) rides along in the manifest."""
+    from repro.checkpoint import manager as CK
+
+    cfg = _cfg(n_iters=24)
+    ref = LifeService(cfg, slice_iters=5)
+    ref.submit(tiny_cohort[0], job_id="good", n_iters=24, format="coo")
+    ref.submit(_poison(tiny_cohort[1]), job_id="bad", n_iters=24,
+               format="coo")
+    w_ref, l_ref = ref.run()["good"]
+
+    ck = str(tmp_path / "svc")
+    svc = LifeService(cfg, ckpt_dir=ck, checkpoint_every=1, slice_iters=5)
+    svc.submit(tiny_cohort[0], job_id="good", n_iters=24, format="coo")
+    svc.submit(_poison(tiny_cohort[1]), job_id="bad", n_iters=24,
+               format="coo")
+    svc.step()
+    svc.step()
+    del svc                                         # the "kill"
+
+    svc2 = LifeService(cfg, ckpt_dir=ck, checkpoint_every=1, slice_iters=5)
+    assert "good" in svc2.resumable_jobs
+    svc2.submit(tiny_cohort[0], job_id="good")
+    w_res, l_res = svc2.run()["good"]
+    np.testing.assert_array_equal(np.asarray(w_res), np.asarray(w_ref))
+    np.testing.assert_array_equal(l_res, l_ref)
+    _, _, manifest = CK.restore(ck)
+    assert "error" in manifest["jobs"]["bad"]
+
+
+def test_submitted_at_zero_boundary(tiny_problem):
+    """0.0 is a legitimate monotonic stamp — the falsy-zero regression:
+    an explicit 0.0 must survive submit, only None gets stamped."""
+    sched = Scheduler(_cfg())
+    j = sched.submit(Job(job_id="z", problem=tiny_problem, n_iters=4,
+                         format="coo", submitted_at=0.0))
+    assert j.submitted_at == 0.0
+    j2 = sched.submit(Job(job_id="u", problem=tiny_problem, n_iters=4,
+                          format="coo"))
+    assert j2.submitted_at is not None and j2.submitted_at > 0.0
+
+
+def test_latency_spans_service_incarnations(tiny_problem, tmp_path):
+    """``serve.job.latency.seconds`` is end-to-end: the manifest's
+    cumulative ``elapsed`` restores into ``Job.prior_elapsed`` and the
+    observed latency covers every leg, not just the post-resume one."""
+    from repro import obs
+    from repro.checkpoint import manager as CK
+
+    ck = str(tmp_path / "svc")
+    svc = LifeService(_cfg(n_iters=24), ckpt_dir=ck, checkpoint_every=1,
+                      slice_iters=5)
+    svc.submit(tiny_problem, job_id="t", n_iters=24, format="coo")
+    svc.step()
+    svc.step()
+    del svc
+    _, _, manifest = CK.restore(ck)
+    elapsed0 = manifest["jobs"]["t"]["elapsed"]
+    assert elapsed0 > 0.0
+
+    obs.enable()
+    svc2 = LifeService(_cfg(n_iters=24), ckpt_dir=ck, checkpoint_every=1,
+                       slice_iters=5)
+    svc2.submit(tiny_problem, job_id="t")
+    job = svc2.scheduler.job("t")
+    assert job.prior_elapsed == pytest.approx(elapsed0)
+    job.prior_elapsed = 100.0       # make the restored leg unmistakable
+    svc2.run()
+    h = obs.histogram("serve.job.latency.seconds")
+    assert h.count == 1 and h.min >= 100.0
+    # and the final manifest carries the cumulative time forward again
+    _, _, m2 = CK.restore(ck)
+    assert m2["jobs"]["t"]["elapsed"] >= 100.0
 
 
 # ----------------------------------------------------------------------------
