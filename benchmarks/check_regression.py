@@ -18,7 +18,10 @@ by ``benchmarks/run.py --metrics`` (schema ``obs-1``): the plan cache's
 warm path must be perfect — gauge ``plan_cache.warm.hit_rate`` == 1.0 over
 a non-zero lookup count.  A warm rebuild that misses even once means plan
 keys stopped being stable across processes, which silently turns every
-serving bucket rebuild into a re-tune.
+serving bucket rebuild into a re-tune.  The snapshot also gates
+``serve.jobs.failed == 0`` (table13 failure isolation) and
+``select.coldstart.measurements == 0`` (table16: the learned cold-start
+path answered a plan-cache miss without timing a single candidate).
 
 Normalization: both payloads carry ``calibration_us`` — the median time of
 a fixed interpret-mode kernel call on the machine that produced them.  The
@@ -73,6 +76,18 @@ def check_metrics(path) -> list:
         failures.append(f"serve.jobs.failed == {failed}, expected 0 on the "
                         f"benign table13 trace (a healthy tenant was "
                         f"condemned by failure isolation)")
+    # table16's predicted cold start must not have timed anything: the
+    # learn subsystem's whole contract is that a cache miss answered by the
+    # predictor performs zero measurements (DESIGN.md §14)
+    coldstart = snapshot_value(snap, "gauges", "select.coldstart.measurements")
+    print(f"metrics: select.coldstart.measurements={coldstart}")
+    if coldstart is None:
+        failures.append("select.coldstart.measurements absent — the table16 "
+                        "predicted cold start did not run")
+    elif coldstart != 0.0:
+        failures.append(f"select.coldstart.measurements == {coldstart}, "
+                        f"expected 0 (the predicted cold-start path timed "
+                        f"candidates instead of predicting)")
     return failures
 
 

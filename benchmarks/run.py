@@ -40,7 +40,7 @@ from benchmarks import (table2_restructuring, table3_partitioning,
                         table8_kernel_ladder, table9_param_sweep,
                         table10_end2end, table11_batched, table12_formats,
                         table13_service, table14_shard_scaling,
-                        table15_tuning)
+                        table15_tuning, table16_coldstart)
 
 TABLES = {
     "table2": table2_restructuring,
@@ -55,6 +55,7 @@ TABLES = {
     "table13": table13_service,       # beyond-paper: serving under open-loop load
     "table14": table14_shard_scaling, # beyond-paper: sharded subjects/sec scaling
     "table15": table15_tuning,        # beyond-paper: tuned vs frozen kernel params
+    "table16": table16_coldstart,     # beyond-paper: learned zero-measurement cold start
 }
 
 SCHEMA_VERSION = 1
@@ -127,6 +128,10 @@ def main(argv=None) -> None:
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
 
     warm_cache_probe()
+    # re-pin table16's zero-measurement invariant gauge after every table:
+    # table13 resets the registry per arrival-rate scenario, which would
+    # otherwise wipe a gauge set mid-run (no-op when table16 did not run)
+    table16_coldstart.set_gauges()
     snap = obs.snapshot()
 
     if args.json:

@@ -37,6 +37,8 @@ class TilePlan:
     row_block:  int32[n_tiles]           output row-block index per grid step.
     local_row:  int32[n_tiles * c_tile]  output row within the row-block.
     n_tiles, c_tile, row_tile, n_rows_padded: static geometry.
+    n_coeffs:   the real (unpadded) coefficient count Nc — also the dummy
+                index that padding slots in ``sel`` point at.
     """
 
     sel: np.ndarray
@@ -46,14 +48,20 @@ class TilePlan:
     c_tile: int
     row_tile: int
     n_rows_padded: int
+    n_coeffs: int
 
     @property
     def n_padded(self) -> int:
         return self.n_tiles * self.c_tile
 
     def occupancy(self) -> float:
-        """Fraction of tile slots holding real coefficients (waste metric)."""
-        return float((self.sel < self.sel.max()).mean()) if self.sel.size else 1.0
+        """Fraction of tile slots holding real coefficients (waste metric).
+
+        Padding is exactly the slots pointing at the dummy index Nc —
+        comparing against ``sel.max()`` instead would miscount the largest
+        real coefficient as padding whenever a plan is exactly full.
+        """
+        return float((self.sel < self.n_coeffs).mean()) if self.sel.size else 1.0
 
 
 def auto_tile(sorted_ids: np.ndarray, n_rows: int, *, row_tile: int = 8,
@@ -114,7 +122,7 @@ def plan_tiles(sorted_ids: np.ndarray, n_rows: int, *, c_tile: int,
     n_rows_padded = -(-n_rows // row_tile) * row_tile
     return TilePlan(sel=sel, row_block=row_block, local_row=local_row,
                     n_tiles=n_tiles, c_tile=c_tile, row_tile=row_tile,
-                    n_rows_padded=n_rows_padded)
+                    n_rows_padded=n_rows_padded, n_coeffs=int(nc))
 
 
 def run_lengths(ids: np.ndarray) -> np.ndarray:

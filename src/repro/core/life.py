@@ -75,6 +75,11 @@ class LifeConfig:
     # measures); "full" searches the launch-parameter space on a cache miss
     # and persists the winner per (dataset, executor, backend, devices).
     tune: str = "off"
+    # Learned cold-start selection (DESIGN.md §14): "auto" lets a trained
+    # predictor beside the plan cache answer format/tune cache misses with
+    # zero-measurement reason="predicted" plans (measured refinement runs
+    # in the background); "off" disables the predict rung of the ladder.
+    predict: str = "auto"
     # Storage dtype of the static operands (dictionary + Phi values):
     # "fp32", "bf16" (bf16 storage / fp32 accumulate — halves resident
     # bytes, accuracy contract repro.tune.plan.BF16_RTOL), or "auto" (a

@@ -40,7 +40,9 @@ from repro.formats.base import FormatPlan
 
 _ENV_VAR = "REPRO_PLAN_CACHE"
 _MAX_BYTES_ENV_VAR = "REPRO_PLAN_CACHE_MAX_BYTES"
-_FORMAT_VERSION = 1      # bump on any incompatible serialization change
+_FORMAT_VERSION = 2      # bump on any incompatible serialization change
+# v2: TilePlan geometry grew n_coeffs (occupancy fix); TunePlan carries the
+# phi_stats it was searched under (the learn subsystem's training features)
 
 
 def default_cache_dir() -> str:
@@ -280,7 +282,8 @@ class PlanCache:
                 row_block=raw["row_block"].astype(np.int32),
                 local_row=raw["local_row"].astype(np.int32),
                 n_tiles=int(geom[0]), c_tile=int(geom[1]),
-                row_tile=int(geom[2]), n_rows_padded=int(geom[3]))
+                row_tile=int(geom[2]), n_rows_padded=int(geom[3]),
+                n_coeffs=int(geom[4]))
         except (KeyError, IndexError, ValueError):
             return None
 
@@ -288,7 +291,7 @@ class PlanCache:
         self._write(key, dict(
             sel=plan.sel, row_block=plan.row_block, local_row=plan.local_row,
             geometry=np.int64([plan.n_tiles, plan.c_tile, plan.row_tile,
-                               plan.n_rows_padded])))
+                               plan.n_rows_padded, plan.n_coeffs])))
 
     # -- SpmvPlan -------------------------------------------------------------
     def get_spmv_plan(self, key: str) -> Optional[SpmvPlan]:
@@ -333,27 +336,16 @@ class PlanCache:
 
     # -- TunePlan -------------------------------------------------------------
     def get_tune_plan(self, key: str):
-        from repro.tune.plan import TunePlan
         raw = self._read(key)
         self.stats.record(raw is not None, "tune")
         if raw is None:
             return None
-        try:
-            params = {str(k): int(v) for k, v in
-                      zip(raw["params_keys"], raw["params_vals"])}
-            meas = {str(k): float(v) for k, v in
-                    zip(raw["meas_keys"], raw["meas_vals"])}
-            return TunePlan(
-                executor=str(raw["executor"]), backend=str(raw["backend"]),
-                n_devices=int(raw["n_devices"]), params=params,
-                compute_dtype=str(raw["compute_dtype"]),
-                reason=str(raw["reason"]), measurements=meas)
-        except (KeyError, ValueError):
-            return None
+        return _parse_tune_plan(raw)
 
     def put_tune_plan(self, key: str, plan) -> None:
         pk = sorted(plan.params)
         mk = sorted(plan.measurements)
+        sk = sorted(plan.stats)
         self._write(key, dict(
             executor=np.str_(plan.executor), backend=np.str_(plan.backend),
             n_devices=np.int64(plan.n_devices),
@@ -363,7 +355,9 @@ class PlanCache:
             params_vals=np.asarray([plan.params[k] for k in pk], np.int64),
             meas_keys=np.asarray(mk, np.str_),
             meas_vals=np.asarray([plan.measurements[k] for k in mk],
-                                 np.float64)))
+                                 np.float64),
+            stats_keys=np.asarray(sk, np.str_),
+            stats_vals=np.asarray([plan.stats[k] for k in sk], np.float64)))
 
     # -- FormatPlan -----------------------------------------------------------
     def get_format_plan(self, key: str) -> Optional[FormatPlan]:
@@ -371,16 +365,7 @@ class PlanCache:
         self.stats.record(raw is not None, "format")
         if raw is None:
             return None
-        try:
-            params = {str(k): int(v) for k, v in
-                      zip(raw["params_keys"], raw["params_vals"])}
-            stats = {str(k): float(v) for k, v in
-                     zip(raw["stats_keys"], raw["stats_vals"])}
-            return FormatPlan(format=str(raw["format"]),
-                              reason=str(raw["reason"]),
-                              params=params, stats=stats)
-        except (KeyError, ValueError):
-            return None
+        return _parse_format_plan(raw)
 
     def put_format_plan(self, key: str, plan: FormatPlan) -> None:
         pk = sorted(plan.params)
@@ -391,3 +376,74 @@ class PlanCache:
             params_vals=np.asarray([plan.params[k] for k in pk], np.int64),
             stats_keys=np.asarray(sk, np.str_),
             stats_vals=np.asarray([plan.stats[k] for k in sk], np.float64)))
+
+    # -- harvest iteration ----------------------------------------------------
+    def iter_plans(self):
+        """Yield every decodable (kind, plan) in the cache directory, kind
+        in {"format", "tune"} — the learn subsystem's harvest source.
+
+        Classification is structural, not key-based (digests are opaque):
+        a FormatPlan payload carries a ``format`` entry, a TunePlan payload
+        an ``executor`` entry.  Other plan kinds (tile/spmv/shard) and
+        corrupt or foreign files are skipped silently; harvesting must
+        degrade, never raise.  Lookup counters are deliberately *not*
+        recorded — a training sweep is not a cache workload and must not
+        distort the warm-path hit-rate gauge CI gates on.
+        """
+        if not self.enabled:
+            return
+        try:
+            names = sorted(os.listdir(self.directory))
+        except OSError:
+            return
+        for name in names:
+            if not name.endswith(".npz"):
+                continue
+            try:
+                with np.load(os.path.join(self.directory, name),
+                             allow_pickle=False) as z:
+                    raw = {k: z[k] for k in z.files}
+            except (OSError, ValueError, KeyError):
+                continue
+            if "format" in raw:
+                plan = _parse_format_plan(raw)
+                if plan is not None:
+                    yield "format", plan
+            elif "executor" in raw:
+                plan = _parse_tune_plan(raw)
+                if plan is not None:
+                    yield "tune", plan
+
+
+def _parse_tune_plan(raw: dict):
+    """Raw npz dict -> TunePlan, or None on a malformed payload.  ``stats``
+    may be absent (plans written before v2 carried none)."""
+    from repro.tune.plan import TunePlan
+    try:
+        params = {str(k): int(v) for k, v in
+                  zip(raw["params_keys"], raw["params_vals"])}
+        meas = {str(k): float(v) for k, v in
+                zip(raw["meas_keys"], raw["meas_vals"])}
+        stats = {str(k): float(v) for k, v in
+                 zip(raw.get("stats_keys", ()), raw.get("stats_vals", ()))}
+        return TunePlan(
+            executor=str(raw["executor"]), backend=str(raw["backend"]),
+            n_devices=int(raw["n_devices"]), params=params,
+            compute_dtype=str(raw["compute_dtype"]),
+            reason=str(raw["reason"]), measurements=meas, stats=stats)
+    except (KeyError, ValueError):
+        return None
+
+
+def _parse_format_plan(raw: dict) -> Optional[FormatPlan]:
+    """Raw npz dict -> FormatPlan, or None on a malformed payload."""
+    try:
+        params = {str(k): int(v) for k, v in
+                  zip(raw["params_keys"], raw["params_vals"])}
+        stats = {str(k): float(v) for k, v in
+                 zip(raw["stats_keys"], raw["stats_vals"])}
+        return FormatPlan(format=str(raw["format"]),
+                          reason=str(raw["reason"]),
+                          params=params, stats=stats)
+    except (KeyError, ValueError):
+        return None

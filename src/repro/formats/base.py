@@ -106,10 +106,19 @@ def canonical_triples(phi: PhiTensor) -> Tuple[np.ndarray, ...]:
 class FormatPlan:
     """Per-dataset format choice, serialized through the PlanCache.
 
-    ``format``: chosen format name; ``reason``: "heuristic" or "autotune";
+    ``format``: chosen format name; ``reason``: how it was decided —
+      "heuristic"  inspector run-length statistics were decisive;
+      "autotune"   the measured arbitration loop timed the candidates;
+      "explicit"   the caller forced ``config.format``, nothing selected;
+      "predicted"  a trained :mod:`repro.learn` predictor answered a cache
+                   miss from ``phi_stats`` features with zero measurements
+                   (DESIGN.md §14) — served immediately, then upgraded in
+                   place by background refinement to one of the reasons
+                   above;
     ``params``: layout geometry (row_tile / slot_tile for SELL); ``stats``:
-    the inspector statistics the decision was based on, kept so benchmarks
-    and audits can explain the choice without re-running the inspector.
+    the inspector statistics the decision was based on, kept so benchmarks,
+    audits and the :mod:`repro.learn` harvester can explain (or train on)
+    the choice without re-running the inspector.
     """
 
     format: str

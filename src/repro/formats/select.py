@@ -8,14 +8,19 @@ Phi.  The decision pipeline:
    keyed by ``plan_cache.format_plan_key`` (full index content + geometry +
    candidate set, format-versioned); a warm engine rebuild loads it and
    never re-runs selection.
-2. **Heuristic** — from ``core/inspector.py:phi_stats`` run-length
+2. **Predict** — a trained :class:`~repro.learn.model.Predictor` beside
+   the cache directory answers the miss from ``phi_stats`` features alone
+   (``reason="predicted"``, zero measurements); the measured pipeline is
+   enqueued on :data:`repro.learn.refine.QUEUE` so background refinement
+   upgrades the cached entry in place (DESIGN.md §14).
+3. **Heuristic** — from ``core/inspector.py:phi_stats`` run-length
    statistics: SELL's padding overhead is computable in O(Nc) without
    encoding anything.  Overhead at most ``sell_accept`` extra slots per
    coefficient -> take SELL outright (dense uniform rows: the direct
    row-block kernels win and the padding is cheap); at least
    ``sell_reject`` -> SELL is struck from the candidate set (skewed row
    degrees: padding would dominate bytes moved).
-3. **Autotune fallback** — whenever more than one candidate survives the
+4. **Autotune fallback** — whenever more than one candidate survives the
    heuristic (SELL in its ambiguous zone, or COO vs ALTO with no static
    signal between them), measure: the same three-runs-per-candidate loop
    as the paper's runtime restructuring selection, literally reused from
@@ -38,13 +43,13 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import spmv
 from repro.core.inspector import phi_stats
 from repro.core.restructure import autotune_plan, sort_by_host
 from repro.core.std import PhiTensor
 from repro.formats import fcoo as fcoo_mod
 from repro.formats import sell as sell_mod
-from repro.formats.alto import AltoPhi
 from repro.formats.fcoo import FcooPhi
 from repro.formats.base import FormatPlan, format_names
 from repro.formats.sell import DEFAULT_ROW_TILE, DEFAULT_SLOT_TILE, SellPhi
@@ -108,6 +113,7 @@ def choose_format(
     sell_accept: float = DEFAULT_SELL_ACCEPT,
     sell_reject: float = DEFAULT_SELL_REJECT,
     cache=None,
+    predictor=None,
 ) -> FormatPlan:
     """Pick a Phi format for one dataset (see module docstring pipeline)."""
     if not allowed:
@@ -123,29 +129,76 @@ def choose_format(
             sell_accept=sell_accept, sell_reject=sell_reject)
         plan = cache.get_format_plan(key)
         if plan is not None:
+            if plan.reason == "predicted":
+                # a predicted entry that is still serving hits was never
+                # refined (process restart dropped the queue) — re-enqueue
+                _enqueue_refinement(key, cache, phi, dictionary, allowed,
+                                    row_tile, slot_tile, sell_accept,
+                                    sell_reject)
             return plan
 
     stats = phi_stats(phi, row_tile=row_tile, slot_tile=slot_tile)
     params = dict(row_tile=row_tile, slot_tile=slot_tile)
-    overhead = max(stats["dsc.sell_overhead"], stats["wc.sell_overhead"])
 
+    if predictor is not None:
+        with obs.span("select.predicted") as sp:
+            fmt = predictor.predict_format(stats, allowed=allowed)
+            sp.set_attr("format", fmt)
+        if fmt is not None:
+            obs.counter("learn.predict", kind="format", outcome="hit").inc()
+            plan = FormatPlan(fmt, "predicted", params, stats)
+            if key is not None:
+                cache.put_format_plan(key, plan)
+                _enqueue_refinement(key, cache, phi, dictionary, allowed,
+                                    row_tile, slot_tile, sell_accept,
+                                    sell_reject)
+            return plan
+        obs.counter("learn.predict", kind="format", outcome="fallback").inc()
+
+    plan = _decide_format(phi, dictionary, stats, params, allowed,
+                          row_tile=row_tile, slot_tile=slot_tile,
+                          sell_accept=sell_accept, sell_reject=sell_reject)
+    if key is not None:
+        cache.put_format_plan(key, plan)
+    return plan
+
+
+def _decide_format(phi, dictionary, stats, params, allowed, *, row_tile,
+                   slot_tile, sell_accept, sell_reject) -> FormatPlan:
+    """Heuristic + measured rungs of the ladder (no cache, no predictor).
+
+    Factored out so background refinement can re-run exactly this under
+    the same thresholds and overwrite a predicted plan in place."""
+    overhead = max(stats["dsc.sell_overhead"], stats["wc.sell_overhead"])
     candidates = tuple(allowed)
     # strike SELL on heavy skew — unless it is the only candidate the
     # caller permits, in which case the caller's constraint wins
     if "sell" in candidates and overhead >= sell_reject and len(candidates) > 1:
         candidates = tuple(f for f in candidates if f != "sell")
     if "sell" in candidates and overhead <= sell_accept:
-        plan = FormatPlan("sell", "heuristic", params, stats)
-    elif len(candidates) == 1:
-        plan = FormatPlan(candidates[0], "heuristic", params, stats)
-    else:
-        plan = FormatPlan(_measure_formats(phi, dictionary, candidates,
-                                           row_tile, slot_tile),
-                          "autotune", params, stats)
+        return FormatPlan("sell", "heuristic", params, stats)
+    if len(candidates) == 1:
+        return FormatPlan(candidates[0], "heuristic", params, stats)
+    return FormatPlan(_measure_formats(phi, dictionary, candidates,
+                                       row_tile, slot_tile),
+                      "autotune", params, stats)
 
-    if key is not None:
+
+def _enqueue_refinement(key, cache, phi, dictionary, allowed, row_tile,
+                        slot_tile, sell_accept, sell_reject) -> None:
+    """Queue the measured pipeline to upgrade a predicted plan in place."""
+    from repro.learn import refine
+
+    def _task() -> None:
+        stats = phi_stats(phi, row_tile=row_tile, slot_tile=slot_tile)
+        params = dict(row_tile=row_tile, slot_tile=slot_tile)
+        plan = _decide_format(phi, dictionary, stats, params, allowed,
+                              row_tile=row_tile, slot_tile=slot_tile,
+                              sell_accept=sell_accept,
+                              sell_reject=sell_reject)
         cache.put_format_plan(key, plan)
-    return plan
+
+    refine.QUEUE.push("format", key, _task)
 
 
 def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
@@ -159,8 +212,17 @@ def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
             return SellPhi.encode(p, op="dsc", row_tile=row_tile,
                                   slot_tile=slot_tile), None
         if fmt == "alto":
-            enc, order = AltoPhi.encode(p).sort()
-            return enc.decode(), order
+            # prepare the actual registry executor so arbitration charges
+            # ALTO whatever its real DSC path costs — timing dsc_naive over
+            # a decoded COO tensor instead would keep "winning" for alto
+            # even after its executor changes (untuned, untracked build:
+            # selection must not recurse into the kernel autotuner)
+            from types import SimpleNamespace
+            from repro.core.registry import REGISTRY
+            ex = REGISTRY.create(
+                "alto", p, SimpleNamespace(dictionary=dictionary),
+                SimpleNamespace(tune="off"))
+            return ex, None
         if fmt == "fcoo":
             return FcooPhi.encode(p), None
         return sort_by_host(p, "voxel")            # coo
@@ -169,7 +231,7 @@ def _measure_formats(phi: PhiTensor, dictionary, allowed: Tuple[str, ...],
         if fmt == "sell":
             return sell_mod.dsc_reference(prepared, dictionary, w_probe)
         if fmt == "alto":
-            return spmv.dsc_naive(prepared, dictionary, w_probe)
+            return prepared.matvec(w_probe)        # the registry executor
         if fmt == "fcoo":
             return fcoo_mod.dsc_reference(prepared, dictionary, w_probe)
         return spmv.dsc(prepared, dictionary, w_probe)  # coo, voxel-sorted
@@ -217,9 +279,14 @@ def resolve_format(phi: PhiTensor, problem, config, cache=None,
                 f"no candidate format in {candidates} has a mesh executor "
                 f"(shard_rows x shard_cols = {_mesh_cells(config)})")
         candidates = mesh_ok
+    predictor = None
+    if (getattr(config, "predict", "auto") != "off"
+            and cache is not None and cache.enabled):
+        from repro.learn import load_predictor
+        predictor = load_predictor(cache.directory)
     return choose_format(
         phi, problem.dictionary, row_tile=row_tile, slot_tile=slot_tile,
         allowed=candidates,
         sell_accept=getattr(config, "sell_accept", DEFAULT_SELL_ACCEPT),
         sell_reject=getattr(config, "sell_reject", DEFAULT_SELL_REJECT),
-        cache=cache)
+        cache=cache, predictor=predictor)

@@ -1,0 +1,22 @@
+"""Learned zero-measurement format/executor selection (DESIGN.md §14).
+
+The paper times three runs per candidate to pick its restructuring; at
+serving scale that sweep stalls every cold-start dataset.  This package
+closes the loop the plan cache already feeds: harvest (phi_stats features
+-> chosen plan) pairs from persisted FormatPlans/TunePlans, fit a tiny
+dependency-free model, and answer cache misses from it with **zero**
+measurements (``reason="predicted"``), demoting measured autotune to a
+background refinement that upgrades the cache in place.
+
+Modules: :mod:`features` (schema), :mod:`model` (centroid classifier +
+nearest-example params), :mod:`harvest` (cache walk, train, load),
+:mod:`refine` (the background queue the serve frontend drains).
+"""
+from repro.learn.features import (FEATURE_NAMES, FEATURE_SCHEMA,  # noqa: F401
+                                  feature_vector)
+from repro.learn.harvest import (PREDICTOR_FILENAME, clear_load_memo,  # noqa: F401
+                                 harvest, load_predictor, predictor_path,
+                                 train_predictor)
+from repro.learn.model import (CentroidClassifier, NearestExample,  # noqa: F401
+                               Predictor)
+from repro.learn.refine import QUEUE, RefineQueue, run_pending  # noqa: F401

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.life import LifeConfig
+from repro.learn.refine import QUEUE as refine_queue
 from repro.serve.scheduler import (JobCancelledError, JobFailedError,
                                    TERMINAL_STATUSES)
 from repro.serve.service import LifeService
@@ -196,12 +197,20 @@ class LifeFrontend:
         immediately; "shed" — evict the lowest-priority pending job to
         make room (the new job itself is rejected if nothing pending has
         lower priority).
+    refine:
+        True (default) — while the driver is otherwise idle (no pending
+        submissions, no commands, no active jobs) it drains one task per
+        tick from the learn subsystem's background-refinement queue
+        (:data:`repro.learn.refine.QUEUE`), upgrading zero-measurement
+        ``reason="predicted"`` plans to measured ones without ever
+        competing with real work.  False disables the hook.
     """
 
     def __init__(self, config: Optional[LifeConfig] = None, *,
                  service: Optional[LifeService] = None,
                  max_queue: int = 64, backpressure: str = "block",
                  idle_wait: float = 0.002, start: bool = True,
+                 refine: bool = True,
                  **service_kwargs):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(f"backpressure must be one of "
@@ -216,6 +225,7 @@ class LifeFrontend:
         self.max_queue = max_queue
         self.backpressure = backpressure
         self._idle_wait = idle_wait
+        self._refine = refine
         self._lock = threading.Lock()
         self._space = threading.Condition(self._lock)   # admission has room
         self._work = threading.Condition(self._lock)    # driver has work
@@ -361,8 +371,20 @@ class LifeFrontend:
                     break
                 if not (self._pending or self._commands
                         or self.service.scheduler.active()):
-                    self._work.wait(self._idle_wait)
-                    continue
+                    if not (self._refine and len(refine_queue)):
+                        self._work.wait(self._idle_wait)
+                        continue
+                    # fall through (lock released below) to spend the idle
+                    # tick on one background-refinement task
+                    idle_refine = True
+                else:
+                    idle_refine = False
+            if idle_refine:
+                # outside the lock: a measured refinement must never block
+                # submit_async/cancel; one task per tick keeps the driver
+                # responsive — new work is re-checked before the next task
+                refine_queue.run_one()
+                continue
             self._admit()
             self._run_commands()
             if self.service.scheduler.active():

@@ -44,10 +44,15 @@ class TunePlan:
     ``slot_tile`` for the SELL kernels and their per-cell shard variants);
     ``compute_dtype`` is always resolved ("fp32" or "bf16", never "auto").
     ``reason`` records how the plan came to be: "search" (measured),
-    "default" (nothing to search — no tile axes and a fixed dtype), or
-    "untuned" (tune="cached" miss: config constants, never persisted).
+    "default" (nothing to search — no tile axes and a fixed dtype),
+    "predicted" (tune="cached" miss answered by the learn subsystem's
+    predictor — zero measurements; upgraded in place to "search" by
+    background refinement), or "untuned" (tune="cached" miss with no
+    predictor: config constants, never persisted).
     ``measurements`` keeps the per-candidate costs (label -> seconds) so
     benchmarks and audits can explain the choice without re-measuring.
+    ``stats`` carries the ``phi_stats`` feature dict the plan was decided
+    under — the learn subsystem's training pairs are harvested from it.
     """
 
     executor: str
@@ -57,6 +62,7 @@ class TunePlan:
     compute_dtype: str
     reason: str = "search"
     measurements: Dict[str, float] = dataclasses.field(default_factory=dict)
+    stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def apply(self, config):
         """Return ``config`` with the tuned launch parameters substituted.

@@ -6,13 +6,17 @@ for tuning (``LifeConfig.tune != "off"``):
 
   * ``tune="cached"`` — replay a persisted :class:`~repro.tune.plan.TunePlan`
     if the cache holds one for this (dataset, geometry, executor, backend,
-    device count, requested dtype) key; on a miss, fall back to the config's
-    frozen constants without measuring anything (intake paths must never
-    stall on a search).
+    device count, requested dtype) key; on a miss, consult the learn
+    subsystem's trained predictor (DESIGN.md §14) for a zero-measurement
+    ``reason="predicted"`` plan — persisted, and queued for background
+    refinement — and only when no predictor answers fall back to the
+    config's frozen constants (intake paths must never stall on a search).
   * ``tune="full"`` — same warm-hit fast path (a rebuild on tuned data pays
-    zero measurements, regression-tested); on a miss, measure every
-    candidate from :func:`repro.tune.space.search_space` through the shared
-    loop in :mod:`repro.tune.search` and persist the winner.
+    zero measurements, regression-tested), except a cached *predicted* plan
+    counts as a miss (that is what refinement runs: the full mode measures
+    and overwrites it in place); on a miss, measure every candidate from
+    :func:`repro.tune.space.search_space` through the shared loop in
+    :mod:`repro.tune.search` and persist the winner.
 
 Each candidate is measured as a *bound executor* — the same factory path
 production uses — with the cost weighted ``2 x DSC + 1.5 x WC``: the
@@ -65,6 +69,10 @@ def validate_config(config) -> None:
         raise ValueError(
             'compute_dtype="auto" is a searched axis; it needs '
             'tune="cached" or tune="full"')
+    predict = getattr(config, "predict", "auto")
+    if predict not in ("auto", "off"):
+        raise ValueError(
+            f'predict must be "auto" or "off", got {predict!r}')
 
 
 def _untuned(name: str, config) -> TunePlan:
@@ -72,6 +80,67 @@ def _untuned(name: str, config) -> TunePlan:
                     n_devices=len(jax.devices()),
                     params=current_params(name, config),
                     compute_dtype=_resolved_dtype(config), reason="untuned")
+
+
+def _phi_stats_for(phi, config) -> dict:
+    from repro.core.inspector import phi_stats
+    return phi_stats(phi, row_tile=int(getattr(config, "row_tile", 8)),
+                     slot_tile=int(getattr(config, "slot_tile", 32)))
+
+
+def _predicted(name: str, key: str, phi, problem, config,
+               cache) -> Optional[TunePlan]:
+    """Zero-measurement rung of the ladder for a tune="cached" miss.
+
+    Replays the nearest trained dataset's winning params for this
+    (executor, backend) — sanitized to the axes the executor actually
+    exposes, with any axis the example lacks filled from the config (a
+    predicted plan must always be a legal configuration).  Returns None
+    (caller falls back to frozen constants) when prediction is disabled,
+    no predictor is trained, or there is nothing to predict — an executor
+    without tile axes under a fixed dtype is fully determined already.
+    """
+    if getattr(config, "predict", "auto") == "off" or not cache.enabled:
+        return None
+    axes = tile_axes(name)
+    requested = getattr(config, "compute_dtype", "fp32")
+    if not axes and requested != "auto":
+        return None
+    from repro.learn import load_predictor
+    predictor = load_predictor(cache.directory)
+    if predictor is None:
+        return None
+    stats = _phi_stats_for(phi, config)
+    payload = predictor.predict_tune(stats, executor=name,
+                                     backend=backend_name())
+    if payload is None:
+        obs.counter("learn.predict", kind="tune", outcome="fallback").inc()
+        return None
+    obs.counter("learn.predict", kind="tune", outcome="hit").inc()
+    params = current_params(name, config)
+    params.update({ax: int(payload[ax]) for ax in axes if ax in payload})
+    dtype = _resolved_dtype(config)
+    if requested == "auto" and payload.get("compute_dtype") in COMPUTE_DTYPES:
+        dtype = payload["compute_dtype"]
+    plan = TunePlan(executor=name, backend=backend_name(),
+                    n_devices=len(jax.devices()), params=params,
+                    compute_dtype=dtype, reason="predicted", stats=stats)
+    cache.put_tune_plan(key, plan)
+    _enqueue_refinement(name, key, phi, problem, config, cache)
+    return plan
+
+
+def _enqueue_refinement(name: str, key: str, phi, problem, config,
+                        cache) -> None:
+    """Queue a measured tune="full" re-resolve to upgrade a predicted plan
+    (the full mode treats the cached predicted entry as a miss and
+    overwrites it with the searched winner)."""
+    from repro.learn import refine
+
+    def _task() -> None:
+        resolve_plan(name, phi, problem, replace(config, tune="full"), cache)
+
+    refine.QUEUE.push("tune", key, _task)
 
 
 def resolve_plan(name: str, phi, problem, config, cache) -> Optional[TunePlan]:
@@ -102,8 +171,19 @@ def resolve_plan(name: str, phi, problem, config, cache) -> Optional[TunePlan]:
               int(getattr(config, "shard_cols", 1))))
     plan = cache.get_tune_plan(key)
     if plan is not None:
-        return plan
+        if plan.reason == "predicted":
+            if mode == "full":
+                plan = None       # refinement path: measure and overwrite
+            else:
+                # still serving a prediction: make sure refinement is (re)
+                # queued — a process restart drops the in-memory queue
+                _enqueue_refinement(name, key, phi, problem, config, cache)
+        if plan is not None:
+            return plan
     if mode == "cached":
+        plan = _predicted(name, key, phi, problem, config, cache)
+        if plan is not None:
+            return plan
         # miss: frozen constants, no measurement, nothing persisted (a later
         # tune="full" run must still be able to search and fill this key)
         return _untuned(name, config)
@@ -141,10 +221,12 @@ def resolve_plan(name: str, phi, problem, config, cache) -> Optional[TunePlan]:
     obs.histogram("tune.measurements.per_search").observe(
         float(len(candidates)))
     winner = candidates[best_i]
+    # the phi_stats the search was decided under ride along as the learn
+    # subsystem's training features (harvested by repro.learn.harvest)
     plan = TunePlan(executor=name, backend=backend_name(),
                     n_devices=len(jax.devices()), params=winner["params"],
                     compute_dtype=winner["compute_dtype"], reason="search",
-                    measurements=costs)
+                    measurements=costs, stats=_phi_stats_for(phi, config))
     cache.put_tune_plan(key, plan)
     return plan
 

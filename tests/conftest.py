@@ -43,11 +43,16 @@ def _isolated_plan_cache(tmp_path, monkeypatch):
     warm on-disk cache left by an earlier run (or by the developer's own
     engines writing to ~/.cache)."""
     from repro.core import restructure
+    from repro.learn import clear_load_memo, refine
     monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plan-cache"))
     monkeypatch.delenv("REPRO_PLAN_CACHE_MAX_BYTES", raising=False)
     restructure.clear_plan_cache()
+    refine.QUEUE.clear()
+    clear_load_memo()
     yield
     restructure.clear_plan_cache()
+    refine.QUEUE.clear()
+    clear_load_memo()
 
 
 @pytest.fixture(scope="session")

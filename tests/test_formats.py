@@ -389,3 +389,24 @@ def test_engine_sell_with_compaction(tiny_problem):
     w, losses = eng.run()
     assert np.isfinite(losses).all()
     assert losses[-1] < losses[0]
+
+
+def test_measure_formats_times_registry_alto_executor(tiny_problem,
+                                                      monkeypatch):
+    """Regression: format arbitration used to time ALTO as dsc_naive over
+    a decoded COO tensor — never building the registry executor whose cost
+    the measured rung is supposed to charge, so ALTO kept "winning" on a
+    code path it never runs in production."""
+    from repro.core.registry import REGISTRY
+    built = []
+    real = REGISTRY._factories["alto"]
+
+    def counting(*args, **kwargs):
+        built.append(1)
+        return real(*args, **kwargs)
+
+    monkeypatch.setitem(REGISTRY._factories, "alto", counting)
+    fmt = fsel._measure_formats(tiny_problem.phi, tiny_problem.dictionary,
+                                ("coo", "alto"), 8, 32)
+    assert built, "arbitration must build the registry alto executor"
+    assert fmt in ("coo", "alto")

@@ -109,3 +109,14 @@ def test_auto_tile_occupancy_on_uniform_density():
     c, rt = auto_tile(ids, 500)
     plan = plan_tiles(ids, 500, c_tile=c, row_tile=rt)
     assert plan.occupancy() >= 0.3
+
+
+def test_occupancy_exactly_full_tile_is_one():
+    """Regression: an exactly-full tile (nc a multiple of c_tile, zero
+    padding) must report occupancy 1.0.  The old implementation compared
+    ``sel`` against ``sel.max()`` — miscounting the slot holding the
+    largest real coefficient index as padding — and reported (nc-1)/nc."""
+    ids = np.zeros(32, np.int64)              # 32 coefficients, one row block
+    plan = plan_tiles(ids, 8, c_tile=32, row_tile=8)
+    assert plan.sel.size == 32                # a single tile, no pad slots
+    assert plan.occupancy() == 1.0

@@ -426,3 +426,18 @@ def test_degenerate_search_space_persists_default_plan(tmp_path,
     assert eng.tune_plan.reason == "default"
     eng2 = LifeEngine(tiny_problem, dataclasses.replace(cfg, tune="cached"))
     assert eng2.tune_plan.reason == "default"       # warm hit, not untuned
+
+
+def test_measure_candidates_keeps_duplicate_labels():
+    """Regression: two candidates stringifying to the same label used to
+    silently overwrite each other in the measurements dict, so persisted
+    TunePlans under-counted the search."""
+    from repro.tune import search as tsearch
+    costs_seen = iter([2.0, 1.0])
+    with pytest.warns(UserWarning, match="duplicate search candidate"):
+        best, costs = tsearch.measure_candidates(
+            [dict(row_tile=8), dict(row_tile=8)],
+            lambda c: next(costs_seen))
+    assert best == 1                          # the cheaper repeat still wins
+    assert len(costs) == 2                    # both measurements audited
+    assert set(costs.values()) == {2.0, 1.0}
