@@ -40,7 +40,7 @@ from benchmarks import (table2_restructuring, table3_partitioning,
                         table8_kernel_ladder, table9_param_sweep,
                         table10_end2end, table11_batched, table12_formats,
                         table13_service, table14_shard_scaling,
-                        table15_tuning, table16_coldstart)
+                        table15_tuning, table16_coldstart, table17_science)
 
 TABLES = {
     "table2": table2_restructuring,
@@ -56,6 +56,7 @@ TABLES = {
     "table14": table14_shard_scaling, # beyond-paper: sharded subjects/sec scaling
     "table15": table15_tuning,        # beyond-paper: tuned vs frozen kernel params
     "table16": table16_coldstart,     # beyond-paper: learned zero-measurement cold start
+    "table17": table17_science,       # beyond-paper: warm-started science workloads
 }
 
 SCHEMA_VERSION = 1

@@ -145,6 +145,43 @@ def load_latest(ckpt_dir: str
     return restore(ckpt_dir)
 
 
+def restore_job(ckpt_dir: str, job_id: str, step: Optional[int] = None
+                ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """One job's solver arrays + manifest meta from a service snapshot.
+
+    Reads a :class:`~repro.serve.service.LifeService` checkpoint (arrays
+    keyed ``<job_id>/<leaf>``, per-job metadata under the manifest's
+    ``jobs`` map) and extracts a single job — the science workloads use
+    it to warm-start an edited re-solve from the previous checkpointed
+    :class:`~repro.core.sbbnnls.SbbnnlsState` without standing up a
+    service (DESIGN.md §15.3).
+
+    Args:
+        ckpt_dir: the service's checkpoint directory.
+        job_id: job to extract.
+        step: checkpoint step (latest when None).
+
+    Returns:
+        ``(arrays, meta)`` — arrays keyed by leaf name (``w``, ``it``,
+        ``loss``, optionally ``losses``), meta the job's manifest entry
+        (dataset digest, format, done, ...).
+
+    Raises:
+        KeyError: when the job is not in the snapshot.
+        FileNotFoundError: when no checkpoint exists.
+    """
+    _, flat, manifest = restore(ckpt_dir, step)
+    meta = manifest.get("jobs", {}).get(job_id)
+    if meta is None:
+        known = sorted(manifest.get("jobs", {}))
+        raise KeyError(f"job {job_id!r} not in checkpoint "
+                       f"(has {known})")
+    prefix = job_id + SEP
+    arrays = {k[len(prefix):]: v for k, v in flat.items()
+              if k.startswith(prefix)}
+    return arrays, meta
+
+
 def unflatten_like(template: Any, flat: Dict[str, np.ndarray]) -> Any:
     """Rebuild a pytree shaped like `template` from restored arrays."""
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)

@@ -51,6 +51,17 @@ EXECUTORS = REGISTRY.names()          # public alias; registry is the truth
 
 @dataclasses.dataclass
 class LifeConfig:
+    """Engine configuration: executor choice plus every tuning knob.
+
+    The fields form four groups — code version (``executor``, ``format``,
+    mesh geometry), kernel launch parameters (``c_tile``, ``row_tile``,
+    ``slot_tile``, ``seg_tile``), plan-selection policy (``tune``,
+    ``predict``, the SELL thresholds, ``compute_dtype``), and the solver
+    driver (``n_iters``, compaction).  Instances are plain data: hashable
+    config digests and serving batch-compatibility classes are derived
+    from them, so two equal configs must mean identical execution.
+    """
+
     executor: str = "opt"
     n_iters: int = 100
     compact_every: int = 0          # 0 disables weight compaction
@@ -183,10 +194,12 @@ class LifeEngine:
 
     @property
     def wc_plan(self):
+        """Autotuned WC SpmvPlan (auto executor only; None otherwise)."""
         return self.executor.plans.get("wc")
 
     @property
     def cache_stats(self):
+        """Hit/miss counters of the bound plan cache (CacheStats)."""
         return self.cache.stats
 
     # -- driver --------------------------------------------------------------
@@ -287,9 +300,24 @@ class LifeEngine:
         return state.w, np.concatenate(losses)
 
     def loss(self, w: jax.Array) -> float:
+        """NNLS objective ``0.5 * ||Phi w - b||^2`` under this engine's
+        bound SpMV (so a compacted engine scores against its own Phi)."""
         return float(nnls_loss(self.matvec, self.problem.b, w))
 
     def prune_stats(self, w: jax.Array, threshold: float = 1e-6) -> dict:
+        """Support recovery vs the synthetic ground truth.
+
+        Args:
+            w: converged fiber weights.
+            threshold: weights at or below this count as pruned.
+
+        Returns:
+            dict with ``kept``/``total`` counts and ``precision``/
+            ``recall`` of the recovered support against ``w_true > 0``.
+            Only meaningful on synthetic problems that carry ``w_true``;
+            for ground-truth-free pruning use
+            :func:`repro.science.prune_connectome`.
+        """
         w_np = np.asarray(w)
         true = np.asarray(self.problem.w_true) > 0
         kept = w_np > threshold

@@ -96,6 +96,17 @@ class ExecutorRegistry:
     def register(self, name: str, *, consumes: str = "coo",
                  mesh: bool = False
                  ) -> Callable[[ExecutorFactory], ExecutorFactory]:
+        """Decorator registering an executor factory.
+
+        Args:
+            name: executor name (``LifeConfig.executor`` value).
+            consumes: registered Phi layout the factory runs over.
+            mesh: True for the mesh-partitioned path of ``consumes``
+                (at most one per format; see :meth:`mesh_executor_for`).
+
+        Raises:
+            ValueError: when ``name`` is already registered.
+        """
         def deco(factory: ExecutorFactory) -> ExecutorFactory:
             if name in self._factories:
                 raise ValueError(f"executor {name!r} already registered")
@@ -106,6 +117,7 @@ class ExecutorRegistry:
         return deco
 
     def names(self) -> Tuple[str, ...]:
+        """All registered executor names, sorted."""
         return tuple(sorted(self._factories))
 
     def consumes(self, name: str) -> str:

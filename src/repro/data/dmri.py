@@ -19,7 +19,7 @@ a faithful sweep axis, not to claim anatomical realism.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,12 @@ class LifeProblem:
     b: jax.Array                 # (Nv, Ntheta) demeaned measured signal
     w_true: jax.Array            # (Nf,) ground truth weights
     stats: Dict[str, float]
+    # (gx, gy, gz) voxel-grid shape when voxel ids are a row-major box
+    # linearization (set by synth_connectome); None for problems whose
+    # voxel axis has no spatial structure (e.g. crossval restrictions).
+    # Required by coarsen_problem and used by fiber_bundles for 3-D
+    # centroids.
+    grid: Optional[Tuple[int, int, int]] = None
 
 
 def synth_connectome(
@@ -131,7 +137,7 @@ def synth_connectome(
         nnz_per_fiber=float(nc) / max(1, n_fibers),
     )
     return LifeProblem(phi=phi, dictionary=dictionary, b=b,
-                       w_true=w_true_j, stats=stats)
+                       w_true=w_true_j, stats=stats, grid=grid)
 
 
 def synth_cohort(n_subjects: int, *, base_seed: int = 0,
@@ -147,3 +153,132 @@ def synth_cohort(n_subjects: int, *, base_seed: int = 0,
     """
     return [synth_connectome(seed=base_seed + s, algorithm=algorithm,
                              **kwargs) for s in range(n_subjects)]
+
+
+def coarsen_problem(problem: LifeProblem, factor: int, *,
+                    grid: Optional[Tuple[int, int, int]] = None
+                    ) -> LifeProblem:
+    """Voxel-coarsened problem for coarse-to-fine multi-resolution solves.
+
+    Merges every ``factor^3`` block of fine voxels into one coarse voxel:
+    Phi coefficients are remapped and deduped (values summed, like the
+    generator's own dedupe), and the signal rows of merged voxels are
+    summed — so the coarse clean signal is exactly the sum of the fine
+    clean signals and the fiber id space is untouched.  A coarse solve's
+    weights therefore warm-start the fine solve directly
+    (:func:`repro.science.incremental.multires_solve`).
+
+    Args:
+        problem: the fine problem; needs a voxel grid.
+        factor: coarsening factor per axis; 1 returns the input.
+        grid: grid override when ``problem.grid`` is unset.
+
+    Returns:
+        The coarsened :class:`LifeProblem` (its ``grid`` is the coarse
+        box).
+
+    Raises:
+        ValueError: if ``factor < 1`` or no grid is available.
+    """
+    if factor < 1:
+        raise ValueError(f"factor must be >= 1, got {factor}")
+    if factor == 1:
+        return problem
+    g = grid if grid is not None else problem.grid
+    if g is None:
+        raise ValueError("coarsen_problem needs a voxel grid: the problem "
+                         "has grid=None and no grid= was given")
+    gx, gy, gz = g
+    cgx, cgy, cgz = (-(-gx // factor), -(-gy // factor), -(-gz // factor))
+    phi = problem.phi
+    if gx * gy * gz != phi.n_voxels:
+        raise ValueError(f"grid {g} does not linearize to "
+                         f"n_voxels={phi.n_voxels}")
+
+    def to_coarse(vox: np.ndarray) -> np.ndarray:
+        x, rem = vox // (gy * gz), vox % (gy * gz)
+        y, z = rem // gz, rem % gz
+        return ((x // factor) * cgy + (y // factor)) * cgz + (z // factor)
+
+    atoms = np.asarray(phi.atoms, np.int64)
+    cvox = to_coarse(np.asarray(phi.voxels, np.int64))
+    fibers = np.asarray(phi.fibers, np.int64)
+    values = np.asarray(phi.values, np.float64)
+    n_cvox = cgx * cgy * cgz
+    key = (atoms * n_cvox + cvox) * phi.n_fibers + fibers
+    uniq, inv = np.unique(key, return_inverse=True)
+    val_sum = np.zeros(uniq.size, np.float64)
+    np.add.at(val_sum, inv, values)
+    sub = PhiTensor(
+        atoms=jnp.asarray((uniq // phi.n_fibers) // n_cvox, jnp.int32),
+        voxels=jnp.asarray((uniq // phi.n_fibers) % n_cvox, jnp.int32),
+        fibers=jnp.asarray(uniq % phi.n_fibers, jnp.int32),
+        values=jnp.asarray(val_sum, problem.phi.values.dtype),
+        n_atoms=phi.n_atoms, n_voxels=n_cvox, n_fibers=phi.n_fibers)
+    b_np = np.asarray(problem.b)
+    b_coarse = np.zeros((n_cvox, b_np.shape[1]), np.float64)
+    np.add.at(b_coarse, to_coarse(np.arange(gx * gy * gz, dtype=np.int64)),
+              b_np)
+    stats = dict(problem.stats)
+    stats["n_coeffs"] = float(sub.n_coeffs)
+    stats["n_voxels_touched"] = float(np.unique(np.asarray(sub.voxels)).size)
+    return LifeProblem(phi=sub, dictionary=problem.dictionary,
+                       b=jnp.asarray(b_coarse, b_np.dtype),
+                       w_true=problem.w_true, stats=stats,
+                       grid=(cgx, cgy, cgz))
+
+
+def fiber_bundles(problem: LifeProblem, *, bundle_size: int,
+                  n_bundles: int = 1, seed: int = 0
+                  ) -> List[np.ndarray]:
+    """Disjoint, spatially coherent fiber bundles (lesion candidates).
+
+    Each bundle is a seed fiber plus its ``bundle_size - 1`` nearest
+    neighbours by coefficient-centroid distance (3-D positions when the
+    problem has a grid, linear voxel ids otherwise) — a synthetic stand-
+    in for an anatomically grouped tract.  Only fibers with at least one
+    Phi coefficient are eligible, and bundles never overlap.
+
+    Args:
+        problem: the problem to draw bundles from.
+        bundle_size: fibers per bundle.
+        n_bundles: number of disjoint bundles.
+        seed: RNG seed for the bundle seed-fiber draw.
+
+    Returns:
+        ``n_bundles`` sorted int64 arrays of ``bundle_size`` fiber ids.
+
+    Raises:
+        ValueError: when fewer than ``n_bundles * bundle_size`` fibers
+            have coefficients.
+    """
+    fib = np.asarray(problem.phi.fibers, np.int64)
+    vox = np.asarray(problem.phi.voxels, np.int64)
+    if problem.grid is not None:
+        gx, gy, gz = problem.grid
+        pos = np.stack([vox // (gy * gz), (vox // gz) % gy, vox % gz],
+                       axis=1).astype(np.float64)
+    else:
+        pos = vox[:, None].astype(np.float64)
+    counts = np.bincount(fib, minlength=problem.phi.n_fibers)
+    sums = np.zeros((problem.phi.n_fibers, pos.shape[1]))
+    np.add.at(sums, fib, pos)
+    structural = np.nonzero(counts > 0)[0]
+    if structural.size < n_bundles * bundle_size:
+        raise ValueError(
+            f"need {n_bundles * bundle_size} fibers with coefficients, "
+            f"have {structural.size}")
+    centroids = sums[structural] / counts[structural, None]
+    rng = np.random.default_rng(seed)
+    available = np.ones(structural.size, bool)
+    bundles: List[np.ndarray] = []
+    for _ in range(n_bundles):
+        pool = np.nonzero(available)[0]
+        anchor = rng.choice(pool)
+        d = np.linalg.norm(centroids - centroids[anchor], axis=1)
+        d[~available] = np.inf
+        members = np.argsort(d, kind="stable")[:bundle_size]
+        available[members] = False
+        bundles.append(np.sort(structural[members]))
+    return bundles
+

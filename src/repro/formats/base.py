@@ -50,13 +50,25 @@ class PhiFormat(Protocol):
 
     @classmethod
     def encode(cls, phi: PhiTensor, *, op: str = "dsc", **params) -> "PhiFormat":
+        """Build the layout from the canonical COO tensor.
+
+        Args:
+            phi: canonical COO Phi.
+            op: which SpMV the encode is laid out for ("dsc"/"wc") — only
+                meaningful for per-op layouts like SELL; one-copy layouts
+                (ALTO, F-COO) ignore it.
+            **params: layout geometry (e.g. ``row_tile``/``slot_tile``).
+        """
         ...
 
     def decode(self) -> PhiTensor:
+        """Invert :meth:`encode`: the exact same coefficient multiset
+        (order may differ; triples and values round-trip bit-exactly)."""
         ...
 
     @property
     def nbytes(self) -> int:
+        """Resident bytes of the encoded layout (indices + values)."""
         ...
 
     @property
@@ -78,10 +90,16 @@ def register_format(cls):
 
 
 def format_names() -> Tuple[str, ...]:
+    """All registered format names, sorted."""
     return tuple(sorted(FORMATS))
 
 
 def get_format(name: str):
+    """The registered PhiFormat class for ``name``.
+
+    Raises:
+        ValueError: when no format is registered under ``name``.
+    """
     if name not in FORMATS:
         raise ValueError(f"format must be one of {format_names()}, got {name!r}")
     return FORMATS[name]
@@ -127,5 +145,6 @@ class FormatPlan:
     stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def describe(self) -> str:
+        """One-line human-readable summary (format, reason, geometry)."""
         ps = ",".join(f"{k}={v}" for k, v in sorted(self.params.items()))
         return f"format={self.format} ({self.reason}{'; ' + ps if ps else ''})"

@@ -285,12 +285,26 @@ class LifeFrontend:
                      **submit_kwargs) -> JobHandle:
         """Queue one solve for async execution; returns its handle.
 
-        ``submit_kwargs`` mirror :meth:`LifeService.submit` (job_id,
-        n_iters, priority, deadline, format, mesh, tune, compute_dtype).
-        Admission-time validation errors (unknown format, bad mesh,
-        digest-mismatched resume) do not raise here — they resolve the
-        handle as failed, like any other per-job failure.  ``timeout``
-        bounds the wait under the "block" backpressure policy."""
+        Args:
+            problem: the :class:`~repro.data.dmri.LifeProblem` to solve.
+            timeout: bound on the wait for admission-queue space under
+                the "block" backpressure policy.
+            **submit_kwargs: mirror
+                :meth:`~repro.serve.service.LifeService.submit` —
+                job_id, n_iters, priority, deadline, format, mesh,
+                tune, compute_dtype, and ``w0`` (warm-start weights for
+                repeat-visit jobs, DESIGN.md §15.3).
+
+        Returns:
+            A :class:`JobHandle`.  Admission-time validation errors
+            (unknown format, bad mesh, digest-mismatched resume, bad
+            ``w0``) do not raise here — they resolve the handle as
+            "rejected", like any other per-job failure.
+
+        Raises:
+            AdmissionQueueFull: under the "reject" policy, or when a
+                "block" wait exceeds ``timeout``.
+            RuntimeError: when the frontend is already shut down."""
         handle = JobHandle(self, problem, submit_kwargs)
         with self._lock:
             if self._closed:

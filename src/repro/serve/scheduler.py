@@ -85,7 +85,7 @@ from repro.core.batched import BatchedLifeEngine
 from repro.core.life import LifeConfig, LifeEngine
 from repro.core.registry import REGISTRY
 from repro.core.plan_cache import PlanCache
-from repro.core.sbbnnls import SbbnnlsState
+from repro.core.sbbnnls import SbbnnlsState, sbbnnls_init
 from repro.data.dmri import LifeProblem
 
 #: formats whose stacked operands run under vmap — eligible for shared
@@ -169,6 +169,12 @@ class Job:
     # differently never share a micro-batch (DESIGN.md §10.4)
     tune: Optional[str] = None            # "off" | "cached" | "full"
     compute_dtype: Optional[str] = None   # "fp32" | "bf16" | "auto"
+    # warm-start weights (Nf,): the solver starts from sbbnnls_init(w0)
+    # instead of all-ones — the repeat-visit path for Phi-delta
+    # resubmissions and virtual lesions (DESIGN.md §15.3).  Not part of
+    # the batch-compatibility class: states are initialized per job, so
+    # warm and cold jobs share a micro-batch freely.
+    w0: Optional[np.ndarray] = None
     # None = unset (stamped at submit); 0.0 is a legitimate monotonic time
     submitted_at: Optional[float] = None
     # -- progress (owned by the scheduler) --------------------------------
@@ -272,6 +278,13 @@ class _Bucket:
         """
         engine = self.engine(base, cache)
         k = min([slice_iters] + [j.remaining for j in self.jobs])
+        # warm starts: a job carrying w0 gets its state from
+        # sbbnnls_init(w0) instead of the engine's all-ones default —
+        # per job, so one micro-batch can mix warm and cold members
+        for j in self.jobs:
+            if j.state is None and j.w0 is not None:
+                j.state = sbbnnls_init(
+                    jnp.asarray(j.w0, j.problem.dictionary.dtype))
         if self.solo:
             job = self.jobs[0]
             if job.state is None:
@@ -386,6 +399,17 @@ class Scheduler:
                     f"format {job.format!r} has no mesh executor; mesh "
                     f"jobs must name an explicit cell format from "
                     f"{meshable}")
+        if job.w0 is not None:
+            w0 = np.asarray(job.w0)
+            nf = job.problem.phi.n_fibers
+            if w0.shape != (nf,):
+                raise ValueError(f"w0 has shape {w0.shape}, expected "
+                                 f"({nf},) for this problem")
+            if not np.all(np.isfinite(w0)) or bool((w0 < 0).any()):
+                raise ValueError("w0 must be finite and nonnegative "
+                                 "(SBBNNLS iterates live in the "
+                                 "nonnegative orthant)")
+            job.w0 = w0
         if not job.dataset:
             job.dataset = dataset_key(job.problem)
         if not job.dict_digest:

@@ -89,8 +89,17 @@ class LifeService:
                format: Optional[str] = None,
                mesh: Optional[Tuple[int, int]] = None,
                tune: Optional[str] = None,
-               compute_dtype: Optional[str] = None) -> str:
+               compute_dtype: Optional[str] = None,
+               w0: Optional[np.ndarray] = None) -> str:
         """Queue one solve; returns its job id.
+
+        ``w0`` warm-starts the solver from the given weights instead of
+        the all-ones default (shape ``(n_fibers,)``, finite,
+        nonnegative) — the repeat-visit path for Phi-delta resubmission
+        and virtual lesions (DESIGN.md §15.3).  It applies to *fresh*
+        jobs only: on a checkpoint resume the restored state is the warm
+        start, so passing ``w0`` alongside one is rejected rather than
+        silently picking a winner.
 
         ``deadline`` is seconds from now (converted to an absolute monotonic
         time for EDF ordering).  If ``job_id`` names a checkpointed solve,
@@ -123,9 +132,14 @@ class LifeService:
                   deadline=None if deadline is None else now + deadline,
                   format=self.config.format if format is None else format,
                   mesh=None if mesh is None else tuple(mesh),
-                  tune=tune, compute_dtype=compute_dtype,
+                  tune=tune, compute_dtype=compute_dtype, w0=w0,
                   submitted_at=now, dataset=dataset_key(problem))
         if job_id in self._resumable:
+            if w0 is not None:
+                raise ValueError(
+                    f"resume of job {job_id!r} rejected: a checkpointed "
+                    f"state exists and is the warm start; w0 would "
+                    f"silently discard it")
             arrays, meta = self._resumable[job_id]
             if meta.get("dataset") != job.dataset:
                 raise ValueError(

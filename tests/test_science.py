@@ -1,0 +1,296 @@
+"""Science-workload layer: pruning, crossval, lesions, warm starts (§15)."""
+import os
+
+import numpy as np
+import pytest
+
+TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+from repro.core.life import LifeConfig, LifeEngine
+from repro.data.dmri import (coarsen_problem, fiber_bundles,
+                             synth_connectome)
+from repro.science import (crossval_rmse, heldout_rmse, kfold_voxel_folds,
+                           lesion_problem, multires_solve, prune_connectome,
+                           restrict_to_voxels, resubmit_delta,
+                           solve_to_convergence, virtual_lesion,
+                           warm_start_weights, weight_summary)
+
+CFG = LifeConfig(executor="opt")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return synth_connectome(n_fibers=96, n_theta=16, n_atoms=24,
+                            grid=(10, 10, 10), seed=3 + TEST_SEED,
+                            noise=0.02)
+
+
+@pytest.fixture(scope="module")
+def converged(problem):
+    return solve_to_convergence(LifeEngine(problem, CFG), rtol=1e-5,
+                                chunk=8, max_iters=300)
+
+
+# -- pruning ---------------------------------------------------------------
+
+def test_prune_support_and_compaction(problem, converged):
+    pr = prune_connectome(problem, converged.w, threshold=1e-3)
+    w = converged.w
+    expect = np.nonzero(w > 1e-3)[0]
+    structural = np.unique(np.asarray(problem.phi.fibers))
+    expect = np.intersect1d(expect, structural)
+    assert np.array_equal(pr.support, expect)
+    assert 0 < pr.n_kept < pr.n_fibers_total
+    # compacted Phi holds exactly the surviving fibers' coefficients
+    assert set(np.unique(np.asarray(pr.phi.fibers))) <= set(pr.support)
+    fib = np.asarray(problem.phi.fibers)
+    assert pr.phi.n_coeffs == int(np.isin(fib, pr.support).sum())
+    # fiber id space unchanged: weight vectors stay shape-compatible
+    assert pr.phi.n_fibers == problem.phi.n_fibers
+    assert pr.weight_of(int(pr.support[0])) == pytest.approx(
+        float(w[pr.support[0]]))
+    off = np.setdiff1d(np.arange(problem.phi.n_fibers), pr.support)
+    assert pr.weight_of(int(off[0])) == 0.0
+    s = weight_summary(w, 1e-3)
+    assert s["kept"] == float(pr.n_kept)
+    assert s["w_min"] > 1e-3
+
+
+def test_prune_support_identical_across_formats(problem):
+    """Same seed through coo/sell/fcoo -> bit-identical pruned support."""
+    supports = {}
+    for fmt, executor in (("coo", "opt"), ("sell", "kernel-sell"),
+                          ("fcoo", "kernel-fcoo")):
+        cfg = LifeConfig(executor=executor, format=fmt, n_iters=40)
+        w, _ = LifeEngine(problem, cfg).run()
+        supports[fmt] = prune_connectome(problem, w, 1e-3).support
+    assert np.array_equal(supports["coo"], supports["sell"])
+    assert np.array_equal(supports["coo"], supports["fcoo"])
+
+
+# -- cross-validation ------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 3, 7])
+def test_kfold_disjoint_and_covering(k):
+    n = 211
+    folds = kfold_voxel_folds(n, k, seed=TEST_SEED)
+    assert len(folds) == k
+    cat = np.concatenate(folds)
+    assert cat.size == n                       # covering, no duplicates
+    assert np.array_equal(np.sort(cat), np.arange(n))
+    sizes = [f.size for f in folds]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_kfold_validation():
+    with pytest.raises(ValueError):
+        kfold_voxel_folds(10, 1)
+    with pytest.raises(ValueError):
+        kfold_voxel_folds(10, 11)
+
+
+def test_restrict_to_voxels_consistency(problem):
+    """Restricted prediction rows == the same rows of the full prediction."""
+    from repro.core import spmv
+    vox = np.arange(0, problem.phi.n_voxels, 7)
+    sub = restrict_to_voxels(problem, vox)
+    assert sub.phi.n_voxels == vox.size
+    assert sub.b.shape[0] == vox.size
+    full = np.asarray(spmv.dsc_naive(problem.phi, problem.dictionary,
+                                     problem.w_true))
+    part = np.asarray(spmv.dsc_naive(sub.phi, sub.dictionary, sub.w_true))
+    np.testing.assert_allclose(part, full[vox], rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        restrict_to_voxels(problem, [])
+    with pytest.raises(ValueError):
+        restrict_to_voxels(problem, [problem.phi.n_voxels])
+
+
+def test_crossval_beats_null(problem):
+    cv = crossval_rmse(problem, CFG, k=3, seed=TEST_SEED, n_iters=40)
+    assert len(cv.fold_rmse) == 3
+    assert cv.mean_rmse < cv.null_rmse
+    assert 0.0 < cv.relative_rmse < 1.0
+    assert "crossval" in cv.describe()
+
+
+# -- virtual lesions -------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bundle(problem):
+    return fiber_bundles(problem, bundle_size=6, n_bundles=1,
+                         seed=TEST_SEED)[0]
+
+
+def test_fiber_bundles_disjoint_structural(problem):
+    bundles = fiber_bundles(problem, bundle_size=5, n_bundles=3, seed=2)
+    structural = set(np.unique(np.asarray(problem.phi.fibers)).tolist())
+    seen = set()
+    for b in bundles:
+        assert b.size == 5
+        ids = set(b.tolist())
+        assert ids <= structural
+        assert not ids & seen
+        seen |= ids
+
+
+def test_lesion_problem_keeps_fiber_space(problem, bundle):
+    les = lesion_problem(problem, bundle)
+    assert les.phi.n_fibers == problem.phi.n_fibers
+    assert not np.isin(np.asarray(les.phi.fibers), bundle).any()
+    assert np.all(np.asarray(les.w_true)[bundle] == 0.0)
+    with pytest.raises(ValueError):
+        lesion_problem(problem, [])
+    with pytest.raises(ValueError):
+        lesion_problem(problem, [problem.phi.n_fibers])
+
+
+def test_lesioned_fibers_exactly_zero_in_pruned(problem, bundle, converged):
+    """Lesioned fibers end with exactly zero weight in the pruned result."""
+    rep = virtual_lesion(problem, bundle, CFG, w_full=converged.w,
+                         rtol=1e-5, chunk=8, max_iters=300)
+    # zero warm start + zero column => the weight never moves off zero
+    assert np.all(rep.w_lesioned[bundle] == 0.0)
+    les = lesion_problem(problem, bundle)
+    pr = prune_connectome(les, rep.w_lesioned, threshold=1e-3)
+    assert not np.isin(bundle, pr.support).any()
+    for f in bundle:
+        assert pr.weight_of(int(f)) == 0.0
+    assert "evidence" in rep.describe()
+
+
+def test_warm_start_matches_cold_fixed_point(problem, bundle, converged):
+    """After a Phi delta, warm and cold solves reach the same fixed point
+    (tolerance-bounded) and the warm start takes no more iterations."""
+    les = lesion_problem(problem, bundle)
+    cold = solve_to_convergence(LifeEngine(les, CFG), rtol=1e-5,
+                                chunk=8, max_iters=300)
+    warm = solve_to_convergence(
+        LifeEngine(les, CFG), w0=warm_start_weights(converged.w, bundle),
+        rtol=1e-5, chunk=8, max_iters=300)
+    assert warm.converged and cold.converged
+    assert warm.iters <= cold.iters
+    assert heldout_rmse(les, warm.w) == pytest.approx(
+        heldout_rmse(les, cold.w), rel=1e-2)
+    # same support at a threshold comfortably above solver noise
+    assert np.array_equal(prune_connectome(les, warm.w, 1e-2).support,
+                          prune_connectome(les, cold.w, 1e-2).support)
+
+
+def test_virtual_lesion_from_checkpoint(problem, bundle, tmp_path):
+    from repro.core.life import LifeConfig as LC
+    from repro.serve.service import LifeService
+    svc = LifeService(LC(executor="opt"), ckpt_dir=str(tmp_path / "ck"))
+    svc.submit(problem, job_id="subject", n_iters=48)
+    svc.run()
+    rep = virtual_lesion(problem, bundle, CFG, ckpt_dir=str(tmp_path / "ck"),
+                         job_id="subject", rtol=1e-4, chunk=8, max_iters=200)
+    assert rep.iters_full == 0            # warm start came from the snapshot
+    assert rep.iters_warm > 0
+    with pytest.raises(KeyError):
+        virtual_lesion(problem, bundle, CFG,
+                       ckpt_dir=str(tmp_path / "ck"), job_id="nope")
+
+
+# -- multi-resolution ------------------------------------------------------
+
+def test_coarsen_problem_signal_sums(problem):
+    c = coarsen_problem(problem, 2)
+    gx, gy, gz = problem.grid
+    assert c.grid == (5, 5, 5)
+    assert c.phi.n_voxels == 125
+    assert c.phi.n_fibers == problem.phi.n_fibers
+    # coarse row = sum of its children's rows
+    b = np.asarray(problem.b)
+    got = np.asarray(c.b)
+    vox = np.arange(gx * gy * gz)
+    x, rem = vox // (gy * gz), vox % (gy * gz)
+    y, z = rem // gz, rem % gz
+    cid = ((x // 2) * 5 + (y // 2)) * 5 + (z // 2)
+    expect = np.zeros_like(got)
+    np.add.at(expect, cid, b)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+    assert coarsen_problem(problem, 1) is problem
+    with pytest.raises(ValueError):
+        coarsen_problem(problem, 0)
+    sub = restrict_to_voxels(problem, [0, 1])      # grid=None
+    with pytest.raises(ValueError):
+        coarsen_problem(sub, 2)
+
+
+def test_multires_resume_skips_completed_levels(problem, tmp_path):
+    ck = str(tmp_path / "mr")
+    mr = multires_solve(problem, CFG, factors=(2,), rtol=1e-4, chunk=8,
+                        max_iters=200, ckpt_dir=ck)
+    assert mr.resumed_at == 0
+    assert len(mr.levels) == 2 and all(lv["iters"] > 0 for lv in mr.levels)
+    again = multires_solve(problem, CFG, factors=(2,), rtol=1e-4, chunk=8,
+                           max_iters=200, ckpt_dir=ck)
+    assert again.resumed_at == 2          # everything came from checkpoints
+    assert again.total_iters == 0
+    np.testing.assert_allclose(again.final.w, mr.final.w)
+    with pytest.raises(ValueError):
+        multires_solve(problem, CFG, factors=(2, 4))
+    with pytest.raises(ValueError):
+        multires_solve(problem, CFG, factors=(1,))
+
+
+# -- served warm starts ----------------------------------------------------
+
+def test_service_w0_warm_start(problem, converged):
+    from repro.serve.service import LifeService
+    svc = LifeService(LifeConfig(executor="opt"))
+    svc.submit(problem, job_id="cold", n_iters=16)
+    svc.submit(problem, job_id="warm", n_iters=16, w0=converged.w)
+    res = svc.run()
+    _, cold_losses = res["cold"]
+    _, warm_losses = res["warm"]
+    assert warm_losses[0] < cold_losses[0]
+    with pytest.raises(ValueError):
+        svc.submit(problem, job_id="bad-shape", w0=np.ones(3))
+    with pytest.raises(ValueError):
+        svc.submit(problem, job_id="bad-sign",
+                   w0=-np.ones(problem.phi.n_fibers))
+
+
+def test_resubmit_delta_through_frontend(problem, bundle, converged):
+    from repro.serve.frontend import LifeFrontend
+    les = lesion_problem(problem, bundle)
+    with LifeFrontend(LifeConfig(executor="opt"), refine=False) as fe:
+        h = resubmit_delta(fe, les, converged.w, lesioned=bundle, n_iters=16)
+        w, losses = h.result(timeout=120)
+        assert np.all(np.asarray(w)[bundle] == 0.0)
+        cold = fe.submit_async(les, n_iters=16)
+        _, cold_losses = cold.result(timeout=120)
+    assert losses[0] < cold_losses[0]
+    with pytest.raises(ValueError):
+        resubmit_delta(fe, les, np.ones(3))
+
+
+def test_example_smoke(monkeypatch, capsys):
+    """examples/prune_connectome.py runs end to end on a small problem."""
+    import importlib.util
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "prune_connectome.py")
+    spec = importlib.util.spec_from_file_location("prune_connectome", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    monkeypatch.setattr("sys.argv", ["prune_connectome.py", "64"])
+    mod.main()
+    out = capsys.readouterr().out
+    assert "pruned connectome" in out
+    assert "evidence" in out
+    assert "done." in out
+
+
+def test_resume_rejects_w0(problem, tmp_path):
+    from repro.serve.service import LifeService
+    ck = str(tmp_path / "ck")
+    svc = LifeService(LifeConfig(executor="opt"), ckpt_dir=ck)
+    svc.submit(problem, job_id="s", n_iters=16)
+    svc.run()
+    svc2 = LifeService(LifeConfig(executor="opt"), ckpt_dir=ck)
+    assert "s" in svc2.resumable_jobs
+    with pytest.raises(ValueError, match="warm start"):
+        svc2.submit(problem, job_id="s",
+                    w0=np.ones(problem.phi.n_fibers))
